@@ -1,0 +1,53 @@
+"""Checkpoint-store benchmark: Scavenger GC vs naive exhaustion under a
+disk quota (the paper's trade-off on the training substrate).
+
+Writes synthetic 'checkpoints' (param/opt shards) every round, keeps the
+last 2, and measures space amp + GC read traffic.
+"""
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+
+from .common import row
+
+
+def _churn(engine: str, rounds=12, shards=16, shard_kb=64):
+    root = tempfile.mkdtemp(prefix=f"ckpt-{engine}-")
+    data = np.random.default_rng(0).bytes(shard_kb << 10)
+    quota = int(3.0 * shards * (shard_kb << 10))
+    st = CheckpointStore(root, engine=engine, quota_bytes=quota,
+                         log_target=256 << 10)
+    peak = 0
+    for step in range(rounds):
+        for s in range(shards):
+            st.put(f"train/{step}/p{s}", data, hot=True)
+        st.put(f"meta/{step}", b"{}", hot=False)
+        # retention: keep last 2 steps
+        if step >= 2:
+            for s in range(shards):
+                st.delete(f"train/{step - 2}/p{s}")
+            st.delete(f"meta/{step - 2}")
+        st.run_gc()
+        peak = max(peak, st.total_bytes())
+    out = st.stats()
+    out["peak_amp"] = peak / max(st.live_bytes(), 1)
+    st.close()
+    shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def run(scale=None):
+    rows = []
+    for engine in ("scavenger", "naive"):
+        st = _churn(engine)
+        rows.append(row(f"checkpoint/{engine}", 0.0,
+                        space_amp=st["space_amp"],
+                        peak_amp=st["peak_amp"],
+                        gc_read_mb=st["gc_read_bytes"] / 1e6,
+                        gc_runs=st["gc_runs"],
+                        throttle_events=st["throttle_events"]))
+    return rows

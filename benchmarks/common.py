@@ -1,0 +1,60 @@
+"""Shared benchmark machinery.
+
+Every module exposes ``run(scale) -> list[row]`` where a row is
+``{"name": str, "us_per_call": float, "derived": str}`` (the CSV contract
+of benchmarks/run.py).  ``us_per_call`` is simulated microseconds per user
+operation (deterministic device model — see DESIGN.md §3); ``derived``
+carries the figure-specific metrics being validated against the paper.
+
+Scales: quick (default, CI-sized) | full (EXPERIMENTS.md numbers).
+Dataset sizes are scaled-down versions of the paper's 100GB/300GB runs
+with structural ratios held (EngineConfig.scaled).
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core import EngineConfig, Store
+from repro.workloads import (Runner, WorkloadSpec, fixed, mixed_8k,
+                             pareto_1k)
+
+ENGINES5 = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger")
+
+
+def scale_name() -> str:
+    return os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+
+def ds_bytes(quick_mb: int) -> int:
+    mult = 4 if scale_name() == "full" else 1
+    return quick_mb * mult << 20
+
+
+def build(engine: str, spec: WorkloadSpec, quota_x: float | None = None,
+          **overrides) -> tuple[Store, Runner]:
+    quota = int(quota_x * spec.dataset_bytes) if quota_x else None
+    cfg = EngineConfig.scaled(engine, spec.dataset_bytes,
+                              space_quota_bytes=quota, **overrides)
+    store = Store(cfg)
+    return store, Runner(store, spec)
+
+
+def load_update(engine: str, spec: WorkloadSpec,
+                quota_x: float | None = None, **overrides) -> dict:
+    """The paper's standard procedure: load all keys, update 3x dataset."""
+    store, r = build(engine, spec, quota_x, **overrides)
+    r.load()
+    up = r.update()
+    st = store.stats()
+    st["upd_kops"] = up["ops"] / up["sim_s"] / 1e3
+    st["us_per_update"] = up["sim_s"] * 1e6 / up["ops"]
+    st["runner"] = r
+    st["store"] = store
+    return st
+
+
+def row(name: str, us: float, **derived) -> dict:
+    dstr = " ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in derived.items())
+    return {"name": name, "us_per_call": round(us, 3), "derived": dstr}

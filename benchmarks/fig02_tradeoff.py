@@ -1,0 +1,23 @@
+"""Fig. 2: space-time trade-offs of existing solutions (Mixed-8K, no limit).
+
+Paper claims: KV-separated stores beat RocksDB's update throughput by
+2.57-4.16x at 8KB values while using 2.42-2.97x more space.
+"""
+
+from .common import ENGINES5, ds_bytes, load_update, row
+from repro.workloads import mixed_8k
+
+
+def run(scale=None):
+    spec = mixed_8k(dataset_bytes=ds_bytes(16))
+    rows, base = [], None
+    for engine in ENGINES5:
+        st = load_update(engine, spec)
+        if engine == "rocksdb":
+            base = st
+        rows.append(row(
+            f"fig02/{engine}", st["us_per_update"],
+            upd_kops=st["upd_kops"], space_amp=st["space_amp"],
+            x_rocksdb_thpt=st["upd_kops"] / base["upd_kops"],
+            x_rocksdb_space=st["space_amp"] / base["space_amp"]))
+    return rows

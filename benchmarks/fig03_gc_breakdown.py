@@ -1,0 +1,30 @@
+"""Fig. 3: GC latency breakdown (Read / GC-Lookup / Write / Write-Index).
+
+Paper claims: Read dominates (>50%) for most workloads; GC-Lookup grows as
+values shrink and dominates Pareto-1K; Titan's Write-Index ~38% of GC.
+"""
+
+from repro.core.engine import io as sio
+from repro.workloads import fixed, mixed_8k, pareto_1k
+
+from .common import ds_bytes, load_update, row
+
+
+def run(scale=None):
+    wls = [fixed(1024, ds_bytes(8)), fixed(4096, ds_bytes(8)),
+           fixed(16384, ds_bytes(16)), mixed_8k(ds_bytes(16)),
+           pareto_1k(ds_bytes(8))]
+    rows = []
+    for engine in ("titan", "terarkdb", "scavenger"):
+        for spec in wls:
+            st = load_update(engine, spec)
+            io = st["store"].io
+            gc_us = {c: io.time_us.get(c, 0.0) for c in sio.GC_CATS}
+            tot = max(sum(gc_us.values()), 1e-9)
+            rows.append(row(
+                f"fig03/{engine}/{spec.name}", tot / 1e0,
+                read_pct=100 * gc_us[sio.CAT_GC_READ] / tot,
+                lookup_pct=100 * gc_us[sio.CAT_GC_LOOKUP] / tot,
+                write_pct=100 * gc_us[sio.CAT_GC_WRITE] / tot,
+                widx_pct=100 * gc_us[sio.CAT_GC_WRITE_INDEX] / tot))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 5 / Fig. 18: the two sources of space amplification.
+
+Paper claims: S_index exceeds the ideal 1.11 and Exposed/Valid exceeds the
+ideal 0.25 for existing KV-separated stores; under Fixed-8K the index tree
+accounts for ~half of total amplification.  Scavenger's compensated
+compaction drives S_index back to ~1.1.
+"""
+
+from repro.workloads import fixed, pareto_1k
+
+from .common import ds_bytes, load_update, row
+
+
+def run(scale=None):
+    rows = []
+    for engine in ("blobdb", "titan", "terarkdb", "scavenger"):
+        for spec in (fixed(8192, ds_bytes(16)), pareto_1k(ds_bytes(8))):
+            st = load_update(engine, spec)
+            s = st["store"]
+            hidden = s.hidden_garbage_bytes() / max(s.valid_bytes, 1)
+            rows.append(row(
+                f"fig05/{engine}/{spec.name}", st["us_per_update"],
+                s_index=st["s_index"],
+                exposed_over_valid=st["exposed_over_valid"],
+                hidden_over_valid=hidden, space_amp=st["space_amp"]))
+    return rows

@@ -1,0 +1,32 @@
+"""Fig. 12: microbenchmarks under the 1.5x space limit (+12c: I/O bytes).
+
+Paper claims: Scavenger update 2.1-2.6x other KV-separated stores under
+Mixed-8K; read 1.3x RocksDB; I/O reduction 42-99% (read) / 12-41% (write).
+"""
+
+from repro.workloads import mixed_8k, pareto_1k
+
+from .common import ENGINES5, build, ds_bytes, row
+
+
+def run(scale=None):
+    rows = []
+    for mk, mb in ((mixed_8k, 16), (pareto_1k, 8)):
+        spec = mk(dataset_bytes=ds_bytes(mb))
+        for engine in ENGINES5:
+            store, r = build(engine, spec, quota_x=1.5)
+            r.load()
+            up = r.update()
+            rd = r.read(max(200, spec.n_keys // 8))
+            sc = r.scan(64, max_len=100)
+            io = store.io
+            rows.append(row(
+                f"fig12/{engine}/{spec.name}",
+                up["sim_s"] * 1e6 / up["ops"],
+                upd_kops=up["ops"] / up["sim_s"] / 1e3,
+                read_kops=rd["ops"] / rd["sim_s"] / 1e3,
+                scan_kops=sc["ops"] / sc["sim_s"] / 1e3,
+                read_gb=io.total_read_bytes() / 1e9,
+                write_gb=io.total_write_bytes() / 1e9,
+                space_amp=store.space_amplification()))
+    return rows

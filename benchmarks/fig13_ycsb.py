@@ -1,0 +1,25 @@
+"""Fig. 13: YCSB A-F under Mixed-8K with the 1.5x space limit.
+
+Paper claims: Scavenger ~2.2-3.2x others on YCSB-A, 1.9-3.5x on YCSB-F;
+comparable to RocksDB on scan-heavy YCSB-E.
+"""
+
+from repro.workloads import mixed_8k, run_ycsb
+
+from .common import ENGINES5, build, ds_bytes, row
+
+
+def run(scale=None):
+    spec = mixed_8k(dataset_bytes=ds_bytes(8))
+    rows = []
+    for engine in ENGINES5:
+        store, r = build(engine, spec, quota_x=1.5)
+        r.load()
+        r.update()
+        for wl in "ABCDEF":
+            res = run_ycsb(store, spec, wl, n_ops=spec.n_keys // 2,
+                           runner=r)
+            rows.append(row(f"fig13/{engine}/ycsb-{wl}",
+                            res["sim_s"] * 1e6 / res["ops"],
+                            kops=res["kops_per_s"]))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 14/15: update performance and space amp WITHOUT a space limit.
+
+Paper claims: Scavenger matches TerarkDB's foreground performance while
+cutting space amplification up to 40% (2.21 on Mixed-8K, 1.96 Pareto-1K).
+"""
+
+from repro.workloads import mixed_8k, pareto_1k
+
+from .common import ENGINES5, ds_bytes, load_update, row
+
+
+def run(scale=None):
+    rows = []
+    for mk, mb in ((mixed_8k, 16), (pareto_1k, 8)):
+        spec = mk(dataset_bytes=ds_bytes(mb))
+        best_other = 0.0
+        for engine in ENGINES5:
+            st = load_update(engine, spec)
+            rows.append(row(f"fig14/{engine}/{spec.name}",
+                            st["us_per_update"],
+                            upd_kops=st["upd_kops"],
+                            space_amp=st["space_amp"]))
+    return rows

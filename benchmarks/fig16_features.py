@@ -1,0 +1,37 @@
+"""Fig. 16: feature ablation under the 1.5x limit.
+
+TDB = terarkdb; TDB-C = + compensated compaction; +R lazy read; +L DTable
+lookup; +W hot/cold writes; Scavenger = TDB-C+R+L+W.
+Paper claims: TDB-C alone gives 1.6-2.6x update throughput on fixed-length
+workloads; R helps large values, L helps variable-length.
+"""
+
+from repro.workloads import fixed, mixed_8k, pareto_1k
+
+from .common import ds_bytes, load_update, row
+
+VARIANTS = {
+    "TDB": dict(engine="terarkdb"),
+    "TDB-C": dict(engine="terarkdb", compensated_compaction=True),
+    "TDB-C+R": dict(engine="scavenger", index_decoupled=False,
+                    hotcold_write=False),
+    "TDB-C+L": dict(engine="scavenger", lazy_read=False,
+                    hotcold_write=False),
+    "Scavenger": dict(engine="scavenger"),
+}
+
+
+def run(scale=None):
+    wls = [fixed(4096, ds_bytes(8)), fixed(16384, ds_bytes(16)),
+           mixed_8k(ds_bytes(16)), pareto_1k(ds_bytes(8))]
+    rows = []
+    for spec in wls:
+        for name, kw in VARIANTS.items():
+            kw = dict(kw)
+            engine = kw.pop("engine")
+            st = load_update(engine, spec, quota_x=1.5, **kw)
+            rows.append(row(f"fig16/{name}/{spec.name}",
+                            st["us_per_update"],
+                            upd_kops=st["upd_kops"],
+                            space_amp=st["space_amp"]))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 17/18: feature ablation on SPACE AMP without a limit.
+
+Paper claims: compensated compaction alone shrinks space amp <=4% (it
+exposes garbage that GC must then collect); adding I/O-efficient GC brings
+up to 30%; S_index converges to ~1.1 with compensation.
+"""
+
+from repro.workloads import fixed, mixed_8k, pareto_1k
+
+from .common import ds_bytes, load_update, row
+from .fig16_features import VARIANTS
+
+
+def run(scale=None):
+    rows = []
+    for spec in (fixed(8192, ds_bytes(16)), pareto_1k(ds_bytes(8))):
+        for name, kw in VARIANTS.items():
+            kw = dict(kw)
+            engine = kw.pop("engine")
+            st = load_update(engine, spec, **kw)
+            rows.append(row(f"fig17/{name}/{spec.name}",
+                            st["us_per_update"],
+                            space_amp=st["space_amp"],
+                            s_index=st["s_index"],
+                            exposed_over_valid=st["exposed_over_valid"]))
+    return rows

@@ -1,0 +1,45 @@
+"""Fig. 19: update performance across value sizes, mix ratios, skew.
+
+Paper claims: KV separation struggles <=2KB (readahead effect; S-RH
+recovers); Scavenger still leads other KV-separated stores 1.1-4.0x;
+advantage grows with skew (2.1-2.7x at zipf 0.99).
+"""
+
+from repro.workloads import Mixed, WorkloadSpec, fixed, mixed_8k
+
+from .common import ds_bytes, load_update, row
+
+
+def run(scale=None):
+    rows = []
+    # (a) fixed value sizes
+    for vs in (256, 1024, 4096, 16384):
+        spec = fixed(vs, ds_bytes(8 if vs <= 1024 else 16))
+        for engine in ("rocksdb", "terarkdb", "scavenger"):
+            st = load_update(engine, spec, quota_x=1.5)
+            rows.append(row(f"fig19a/{engine}/fixed-{vs}",
+                            st["us_per_update"],
+                            upd_kops=st["upd_kops"],
+                            space_amp=st["space_amp"]))
+        # S-RH: scavenger with GC readahead enabled
+        st = load_update("scavenger", spec, quota_x=1.5, readahead_gc=True)
+        rows.append(row(f"fig19a/scavenger-RH/fixed-{vs}",
+                        st["us_per_update"], upd_kops=st["upd_kops"]))
+    # (b) mixed small:large ratios
+    for frac in (0.1, 0.5, 0.9):
+        spec = WorkloadSpec(f"Mixed-l{frac}", Mixed(large_frac=frac),
+                            ds_bytes(16))
+        for engine in ("terarkdb", "scavenger"):
+            st = load_update(engine, spec, quota_x=1.5)
+            rows.append(row(f"fig19b/{engine}/large{frac}",
+                            st["us_per_update"],
+                            upd_kops=st["upd_kops"]))
+    # (c) skew
+    for theta in (0.0, 0.8, 0.99, 1.2):
+        spec = mixed_8k(ds_bytes(16), zipf_theta=theta)
+        for engine in ("terarkdb", "scavenger"):
+            st = load_update(engine, spec, quota_x=1.5)
+            rows.append(row(f"fig19c/{engine}/zipf{theta}",
+                            st["us_per_update"],
+                            upd_kops=st["upd_kops"]))
+    return rows

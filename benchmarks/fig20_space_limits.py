@@ -1,0 +1,23 @@
+"""Fig. 20: update performance under varying space limits.
+
+Paper claims: Scavenger dominates under stringent quotas (1.25x/1.5x) and
+is the only KV-separated store matching RocksDB at 1.25x.
+"""
+
+from repro.workloads import mixed_8k
+
+from .common import ds_bytes, load_update, row
+
+
+def run(scale=None):
+    spec = mixed_8k(dataset_bytes=ds_bytes(16))
+    rows = []
+    for engine in ("rocksdb", "titan", "terarkdb", "scavenger"):
+        for q in (1.25, 1.5, 2.0, None):
+            st = load_update(engine, spec, quota_x=q)
+            rows.append(row(f"fig20/{engine}/quota-{q or 'none'}",
+                            st["us_per_update"],
+                            upd_kops=st["upd_kops"],
+                            space_amp=st["space_amp"],
+                            stall_s=st["stall_s"]))
+    return rows

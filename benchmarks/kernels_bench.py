@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle — correctness
+timing on CPU; TPU wall-time comes from real hardware, not this container.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (bloom_build, bloom_probe, bloom_probe_ref,
+                           gc_lookup, gc_lookup_ref, hot_cold_partition,
+                           merge_dedup, page_gather, page_gather_ref)
+
+from .common import row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(scale=None):
+    rng = np.random.default_rng(0)
+    rows = []
+    n, q = 8192, 1024
+    skeys = np.sort(rng.choice(np.arange(10 * n, dtype=np.uint32), n,
+                               replace=False))
+    svids = skeys + 1
+    svf = skeys % 997
+    queries = rng.choice(skeys, q)
+    us_k = _time(lambda: gc_lookup(queries, skeys, svids, svf))
+    us_r = _time(lambda: gc_lookup_ref(jnp.asarray(queries),
+                                       jnp.asarray(skeys),
+                                       jnp.asarray(svids),
+                                       jnp.asarray(svf)))
+    rows.append(row("kernels/gc_lookup", us_k, ref_us=us_r, n=n, q=q))
+
+    words, k, nbits = bloom_build(skeys)
+    us_k = _time(lambda: bloom_probe(queries, words, k, nbits))
+    us_r = _time(lambda: bloom_probe_ref(jnp.asarray(queries), words, k,
+                                         nbits))
+    rows.append(row("kernels/bloom_probe", us_k, ref_us=us_r, q=q))
+
+    ak = np.sort(rng.choice(np.arange(1 << 20, dtype=np.uint32), 2048,
+                            replace=False))
+    bk = np.sort(rng.choice(np.arange(1 << 20, dtype=np.uint32), 2048,
+                            replace=False))
+    us_k = _time(lambda: merge_dedup(ak, ak, ak, bk, bk, bk))
+    rows.append(row("kernels/merge_dedup", us_k, n=4096))
+
+    hot = rng.random(4096) < 0.3
+    us_k = _time(lambda: hot_cold_partition(
+        ak.repeat(2)[:4096], hot, ak.repeat(2)[:4096],
+        np.full(4096, 100, np.uint32)))
+    rows.append(row("kernels/partition", us_k, n=4096))
+
+    pages = jnp.asarray(rng.standard_normal((256, 16, 128)),
+                        jnp.float32)
+    table = rng.integers(0, 256, (8, 32)).astype(np.int32)
+    us_k = _time(lambda: page_gather(table, pages))
+    us_r = _time(lambda: page_gather_ref(jnp.asarray(table), pages))
+    rows.append(row("kernels/page_gather", us_k, ref_us=us_r))
+    return rows

@@ -1,0 +1,41 @@
+"""§Perf report: baseline vs optimized cells, from dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_report
+"""
+
+from __future__ import annotations
+
+from .roofline import BASELINE, OPTIMIZED, analyze, load_cells
+
+
+def pairs():
+    base = {(c["arch"], c["shape"], c["mesh"]): c
+            for c in load_cells(opt=False)}
+    opt = {(c["arch"], c["shape"], c["mesh"]): c
+           for c in load_cells(opt=True)}
+    for key in sorted(set(base) & set(opt)):
+        yield key, base[key], opt[key]
+
+
+def main():
+    print("| cell | mesh | term | baseline | optimized | x |")
+    print("|---|---|---|---|---|---|")
+    for (arch, shape, mesh), b, o in pairs():
+        ab, ao = analyze(b, BASELINE), analyze(o, OPTIMIZED)
+        rows = [
+            ("memory s", ab["t_memory_s"], ao["t_memory_s"]),
+            ("collective s", ab["t_collective_s"], ao["t_collective_s"]),
+            ("roofline frac", ab["roofline_frac"], ao["roofline_frac"]),
+            ("temp GB (HLO)", ab["temp_bytes"] / 1e9,
+             ao["temp_bytes"] / 1e9),
+            ("coll GB (HLO)", ab["hlo_collective_bytes"] / 1e9,
+             ao["hlo_collective_bytes"] / 1e9),
+        ]
+        for name, bv, ov in rows:
+            x = (bv / ov) if ov else float("inf")
+            print(f"| {arch}/{shape} | {mesh} | {name} | {bv:.4g} | "
+                  f"{ov:.4g} | {x:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""§Roofline: three-term analysis per (arch x shape x mesh) cell.
+
+Sources and methodology (see EXPERIMENTS.md §Roofline):
+  * The dry-run artifacts (benchmarks/artifacts/dryrun/*.json) prove each
+    cell lowers+compiles on the production meshes and provide
+    memory_analysis and the post-SPMD collective op inventory.
+  * Compute/memory/collective BYTES AND FLOPS are ANALYTIC, derived from
+    the config, shape and sharding policy below.  We attempted to use
+    compiled.cost_analysis(), but XLA:CPU does not recurse into the
+    rematerialized called computations produced by jax.checkpoint-under-
+    scan (verified: 1-layer and 4-layer lowerings report identical FLOPs),
+    so HLO-derived totals undercount by ~the layer count.  The analytic
+    terms are exact for matmuls and first-order for elementwise traffic;
+    the HLO inventory cross-checks which collectives exist and where.
+
+Terms per chip (v5e): peak 197 TFLOP/s bf16, HBM 819 GB/s, ICI 50 GB/s:
+  compute    = analytic_flops_per_chip / peak
+  memory     = analytic_hbm_bytes_per_chip / hbm_bw
+  collective = analytic_collective_bytes_per_chip / ici_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES, TRAIN_OVERRIDES, cache_len_for
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART = Path(__file__).parent / "artifacts" / "dryrun"
+
+
+@dataclasses.dataclass
+class Policy:
+    """Sharding/impl policy knobs that §Perf iterations flip."""
+    attn_impl: str = "naive"          # naive materializes (B,H,Sq,Sk) f32
+    gqa_grouped: bool = False         # naive repeats KV to H heads
+    grad_sharded: bool = False        # else grads all-reduce at full size
+    serve_tp_only: bool = False       # else FSDP params gathered per step
+    accum_divisor: int = 1            # chunked attn -> fewer microbatches
+
+
+BASELINE = Policy()
+OPTIMIZED = Policy(attn_impl="chunked", gqa_grouped=True, grad_sharded=True,
+                   serve_tp_only=True, accum_divisor=1)
+
+
+def _counts(cfg):
+    per = {"attn": 0, "mamba": 0, "mlstm": 0, "slstm": 0, "moe": 0,
+           "dense": 0}
+    for b, f in zip(cfg.block_pattern, cfg.ffn_pattern):
+        per[b] += 1
+        if f in ("moe", "moe+dense"):
+            per["moe"] += 1
+        if f in ("dense", "moe+dense"):
+            per["dense"] += 1
+    return {k: v * cfg.n_periods for k, v in per.items()}
+
+
+def analytic_terms(cfg, shape_name: str, n_chips: int,
+                   policy: Policy = BASELINE) -> dict:
+    """FLOPs / HBM bytes / collective bytes per chip for one step."""
+    s = SHAPES[shape_name]
+    kind = s["kind"]
+    tp = 16
+    fsdp = n_chips // tp
+    seq, batch = s["seq"], s["batch"]
+    counts = _counts(cfg)
+    d, hd, H, K = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+
+    # ----- token geometry -----
+    if kind == "train":
+        q_tokens, kv_len, bsz = seq, seq, batch
+        fwd_mult, train = 3.0, True          # fwd + ~2x bwd
+    elif kind == "prefill":
+        q_tokens, kv_len, bsz = seq, seq, batch
+        fwd_mult, train = 1.0, False
+    else:
+        q_tokens, kv_len, bsz = 1, cache_len_for(cfg, shape_name), batch
+        fwd_mult, train = 1.0, False
+    tokens = q_tokens * bsz
+
+    # ----- FLOPs (global) -----
+    n_embed = cfg.vocab_padded * d * (1 if cfg.tie_embeddings else 2)
+    n_mm = cfg.active_param_count() - n_embed + cfg.vocab_padded * d
+    flops = 2.0 * n_mm * tokens * fwd_mult
+    eff_kv = min(kv_len, cfg.window) if cfg.window else kv_len
+    causal = 0.5 if (kind != "decode" and cfg.window is None) else 1.0
+    attn = (4.0 * bsz * q_tokens * eff_kv * H * hd * causal
+            * counts["attn"] * fwd_mult)
+    if cfg.enc_dec and kind != "decode":
+        attn += (4.0 * bsz * seq * seq * H * hd
+                 * (cfg.n_enc_layers + cfg.n_layers) * fwd_mult)
+    flops += attn
+    flops += (10.0 * tokens * cfg.d_inner * cfg.d_state * counts["mamba"]
+              * fwd_mult)
+    flops += 6.0 * tokens * H * hd * hd * counts["mlstm"] * fwd_mult
+    flops += 8.0 * tokens * d * hd * counts["slstm"] * fwd_mult
+
+    # ----- HBM bytes (per chip) -----
+    # TP-only serving applies only when the TP shard fits the HBM budget
+    # (mirrors launch/dryrun.OPT_REPLICATE_SERVE_PARAMS_GB)
+    tp_only = (policy.serve_tp_only and kind != "train"
+               and cfg.param_count() * 2 / tp <= 8e9)
+    p_active_dev = cfg.active_param_count() * 2 / (
+        tp if tp_only else n_chips)
+    tok_dev = max(tokens / n_chips, 1.0)
+    if train:
+        p_dev = cfg.param_count() * 2 / n_chips
+        mdt = 2 if TRAIN_OVERRIDES.get(cfg.name, {}).get(
+            "moment_dtype") == "bfloat16" else 4
+        # fwd read + remat re-read + bwd read + write, f32 grad rw,
+        # optimizer moment rw
+        mem = p_dev * (4 + 4 + 2 * mdt)
+        mem += 16.0 * tok_dev * d * 2 * cfg.n_layers      # activations
+    elif kind == "prefill":
+        mem = p_active_dev
+        mem += 8.0 * tok_dev * d * 2 * cfg.n_layers
+        mem += 2.0 * bsz * seq * K * hd * 2 * counts["attn"] / n_chips
+    else:
+        mem = p_active_dev                                 # weights stream
+        cache_dev = (2.0 * bsz * eff_kv * K * hd * 2 * counts["attn"]
+                     / n_chips)
+        gqa_factor = (1 + G) if not policy.gqa_grouped else 1.0
+        mem += cache_dev * gqa_factor
+    # naive attention materializes f32 score matrices
+    if policy.attn_impl == "naive" and counts["attn"]:
+        heads = H if not policy.gqa_grouped else H
+        scores = (4.0 * bsz * heads * q_tokens * eff_kv * counts["attn"]
+                  / n_chips)
+        mem += scores * (3 if train else 1)
+
+    # ----- collective bytes (per chip) -----
+    coll = 0.0
+    p_bytes_dev = cfg.param_count() * 2 / n_chips
+    if train:
+        accum = TRAIN_OVERRIDES.get(cfg.name, {}).get("accum_steps", 1)
+        accum = max(1, accum // policy.accum_divisor)
+        # FSDP param all-gather (fwd + remat'd bwd), per microbatch
+        coll += 2 * accum * p_bytes_dev * (fsdp - 1)
+        if policy.grad_sharded:
+            coll += cfg.param_count() * 4 / n_chips * (fsdp - 1)   # RS
+        else:
+            coll += 2 * cfg.param_count() * 4 / n_chips * fsdp     # AR
+    elif not tp_only:
+        coll += 2 * p_bytes_dev * (fsdp - 1)     # param gather per step!
+    # TP activation all-reduces: ~2 per layer
+    coll += 4.0 * tok_dev * d * 2 * cfg.n_layers * fwd_mult
+    # EP all-to-all: dispatch+combine of top-k routed tokens
+    if counts["moe"]:
+        coll += 4.0 * tok_dev * cfg.top_k * d * 2 * counts["moe"] \
+            * fwd_mult
+
+    flops_dev = flops / n_chips
+    return {
+        "flops_per_chip": flops_dev,
+        "hbm_bytes_per_chip": mem,
+        "coll_bytes_per_chip": coll,
+        "t_compute_s": flops_dev / PEAK_FLOPS,
+        "t_memory_s": mem / HBM_BW,
+        "t_collective_s": coll / LINK_BW,
+    }
+
+
+def analyze(info: dict, policy: Policy | None = None) -> dict:
+    cfg = get_config(info["arch"])
+    if policy is None:
+        policy = OPTIMIZED if info.get("opt") else BASELINE
+    shape = SHAPES[info["shape"]]
+    chips = info["n_chips"]
+    t = analytic_terms(cfg, info["shape"], chips, policy)
+    n = cfg.active_param_count()
+    if info["kind"] == "train":
+        model_flops = 6 * n * shape["seq"] * shape["batch"]
+    elif info["kind"] == "prefill":
+        model_flops = 2 * n * shape["seq"] * shape["batch"]
+    else:
+        model_flops = 2 * n * shape["batch"]
+    model_per_dev = model_flops / chips
+    terms = {"compute": t["t_compute_s"], "memory": t["t_memory_s"],
+             "collective": t["t_collective_s"]}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return dict(
+        t, dominant=dom,
+        model_flops_per_dev=model_per_dev,
+        useful_ratio=model_per_dev / max(t["flops_per_chip"], 1e-9),
+        roofline_frac=(model_per_dev / PEAK_FLOPS) / max(bound, 1e-12),
+        hlo_collective_count=info["collectives"]["count"],
+        hlo_collective_bytes=info["collectives"]["total"],
+        temp_bytes=info["memory"].get("temp_size_in_bytes", 0))
+
+
+def load_cells(include_smoke=False, opt=None):
+    cells = []
+    if not ART.exists():
+        return cells
+    for p in sorted(ART.glob("*.json")):
+        if p.stem.endswith("_smoke") and not include_smoke:
+            continue
+        info = json.loads(p.read_text())
+        if opt is not None and bool(info.get("opt")) != opt:
+            continue
+        cells.append(info)
+    return cells
+
+
+def run(scale=None):
+    from .common import row
+    rows = []
+    for info in load_cells(opt=False):
+        a = analyze(info)
+        rows.append(row(
+            f"roofline/{info['arch']}/{info['shape']}/{info['mesh']}",
+            a["t_compute_s"] * 1e6,
+            mem_us=a["t_memory_s"] * 1e6,
+            coll_us=a["t_collective_s"] * 1e6,
+            dominant=a["dominant"],
+            useful_ratio=a["useful_ratio"],
+            roofline_frac=a["roofline_frac"]))
+    if not rows:
+        rows.append(row("roofline/NO-ARTIFACTS", 0.0,
+                        note="run python -m repro.launch.dryrun --all"))
+    return rows
+
+
+def markdown_table(mesh="16x16", opt=False) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for info in load_cells(opt=opt):
+        if info["mesh"] != mesh:
+            continue
+        a = analyze(info)
+        lines.append(
+            f"| {info['arch']} | {info['shape']} | "
+            f"{a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} | "
+            f"{a['t_collective_s']:.3e} | {a['dominant']} | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_frac']:.3f} |")
+    return "\n".join(lines)

@@ -1,0 +1,44 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_SCALE=quick|full.
+Select modules: python -m benchmarks.run [module ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig02_tradeoff", "fig03_gc_breakdown", "fig05_spaceamp_sources",
+    "fig12_micro", "fig13_ycsb", "fig14_nolimit", "fig16_features",
+    "fig17_ablation_space", "fig19_workloads", "fig20_space_limits",
+    "table1_space_overhead", "kernels_bench", "serving_cache",
+    "checkpoint_store", "roofline",
+]
+
+
+def main() -> None:
+    import importlib
+    names = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']},{r['derived']}",
+                      flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"# {name} FAILED: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table I: insert-only space overhead of Scavenger vs TerarkDB.
+
+Paper claims: RTable's dense index costs <5% extra space (4.78% @1K,
+0.51% @4K, 0.04% @16K, 0.29% Mixed-8K, 2.19% Pareto-1K).
+"""
+
+from repro.workloads import fixed, mixed_8k, pareto_1k
+
+from .common import build, ds_bytes, row
+
+
+def run(scale=None):
+    rows = []
+    wls = [fixed(1024, ds_bytes(8)), fixed(4096, ds_bytes(8)),
+           fixed(16384, ds_bytes(16)), mixed_8k(ds_bytes(16)),
+           pareto_1k(ds_bytes(8))]
+    for spec in wls:
+        sizes = {}
+        for engine in ("terarkdb", "scavenger"):
+            store, r = build(engine, spec)
+            r.load()
+            sizes[engine] = store.space_bytes()
+        over = sizes["scavenger"] / sizes["terarkdb"] - 1
+        rows.append(row(f"table1/{spec.name}", 0.0,
+                        terarkdb_mb=sizes["terarkdb"] / 1e6,
+                        scavenger_mb=sizes["scavenger"] / 1e6,
+                        overhead_pct=100 * over))
+    return rows

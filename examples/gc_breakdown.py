@@ -1,0 +1,29 @@
+"""Reproduce the paper's Fig. 3: GC latency breakdown by step.
+
+  PYTHONPATH=src python examples/gc_breakdown.py
+"""
+
+from repro.core import EngineConfig, Store
+from repro.core.engine import io as sio
+from repro.workloads import Runner, fixed, pareto_1k
+
+
+def main():
+    for mk, nm in ((lambda: fixed(16384, 16 << 20), "Fixed-16K"),
+                   (lambda: pareto_1k(8 << 20), "Pareto-1K")):
+        print(f"--- {nm} ---")
+        for engine in ("titan", "terarkdb", "scavenger"):
+            spec = mk()
+            store = Store(EngineConfig.scaled(engine, spec.dataset_bytes))
+            r = Runner(store, spec)
+            r.load()
+            r.update()
+            gc = {c: store.io.time_us.get(c, 0.0) for c in sio.GC_CATS}
+            tot = max(sum(gc.values()), 1e-9)
+            print(f"  {engine:10s} " + "  ".join(
+                f"{c.split('_', 1)[1]}={100 * v / tot:5.1f}%"
+                for c, v in gc.items()))
+
+
+if __name__ == "__main__":
+    main()

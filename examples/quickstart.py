@@ -1,0 +1,41 @@
+"""Quickstart: the paper's core result in one script.
+
+Builds a Scavenger store and a TerarkDB store, runs a scaled Mixed-8K
+update workload under a 1.5x space quota, and prints the space-time
+trade-off (paper Fig. 12 / Fig. 2).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import EngineConfig, Store
+from repro.workloads import Runner, mixed_8k
+
+
+def main():
+    spec = mixed_8k(dataset_bytes=8 << 20)
+    print(f"workload: {spec.name}, {spec.n_keys} keys, "
+          f"{spec.n_updates} updates, 1.5x space quota\n")
+    results = {}
+    for engine in ("rocksdb", "terarkdb", "scavenger"):
+        cfg = EngineConfig.scaled(
+            engine, spec.dataset_bytes,
+            space_quota_bytes=int(1.5 * spec.dataset_bytes))
+        store = Store(cfg)
+        r = Runner(store, spec)
+        r.load()
+        up = r.update()
+        st = store.stats()
+        results[engine] = st
+        print(f"{engine:10s} update={up['ops']/up['sim_s']/1e3:7.1f} kops/s"
+              f"  space_amp={st['space_amp']:.2f}"
+              f"  S_index={st['s_index']:.2f}"
+              f"  write_amp={st['write_amp']:.2f}"
+              f"  GC_runs={st['n_gc_runs']}")
+    sc, tdb = results["scavenger"], results["terarkdb"]
+    print(f"\nScavenger vs TerarkDB: space amp {tdb['space_amp']:.2f} -> "
+          f"{sc['space_amp']:.2f} "
+          f"({100 * (1 - sc['space_amp'] / tdb['space_amp']):.0f}% lower)")
+
+
+if __name__ == "__main__":
+    main()

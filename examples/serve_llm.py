@@ -1,0 +1,12 @@
+"""Batched serving with the Scavenger-paged KV cache.
+
+  PYTHONPATH=src python examples/serve_llm.py
+"""
+
+import subprocess
+import sys
+
+sys.exit(subprocess.run([
+    sys.executable, "-m", "repro.launch.serve", "--arch", "smollm-360m",
+    "--smoke", "--requests", "10", "--max-new", "12", "--slots", "4",
+]).returncode)

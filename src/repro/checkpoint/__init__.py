@@ -1,0 +1,5 @@
+from .store import CheckpointStore, ValueLog
+from .pytree import (save_pytree, load_pytree, steps_available, drop_steps)
+
+__all__ = ["CheckpointStore", "ValueLog", "save_pytree", "load_pytree",
+           "steps_available", "drop_steps"]

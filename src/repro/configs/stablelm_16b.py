@@ -1,0 +1,13 @@
+"""stablelm-1.6b: dense LM, MHA.
+[hf:stabilityai/stablelm-2-1_6b; unverified]  24L d_model=2048 32H
+d_ff=5632 vocab=100352."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b", family="dense",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632,
+    vocab=100352, head_dim=64, norm="ln", act="swiglu", rope=True,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,10 @@
+"""Scavenger core: KV-separated LSM-tree engines (paper's contribution).
+
+Five selectable engines over one deterministic substrate:
+rocksdb | blobdb | titan | terarkdb | scavenger.
+"""
+
+from .engine.config import EngineConfig, ENGINES
+from .store import Store
+
+__all__ = ["EngineConfig", "ENGINES", "Store"]

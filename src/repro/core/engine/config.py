@@ -1,0 +1,150 @@
+"""Engine configuration.
+
+Defaults follow the paper's setup (§IV-A, RocksDB tuning guide): 24B keys,
+512B separation threshold, 64MB memtable/kSST, 256MB vSST, 10 bits/key bloom
+filters, block cache = 1% of dataset, garbage-ratio threshold 0.2, inter-level
+ratio 10, dynamic level sizing.  ``scaled()`` shrinks all absolute sizes while
+holding every structural ratio, so laptop-scale runs reproduce the paper's
+amplification behaviour.
+
+Feature flags map to the paper's ablation variants (Fig. 16/17):
+  - TDB      : engine="terarkdb"
+  - TDB-C    : engine="terarkdb", compensated_compaction=True
+  - Scavenger: engine="scavenger" (compensated + R lazy-read + L dtable +
+               W hot/cold; each independently toggleable)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+ENGINES = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    engine: str = "scavenger"
+
+    # ---- record format (bytes) ----
+    key_bytes: int = 24
+    seq_bytes: int = 8
+    rec_header_bytes: int = 8
+    ref_bytes: int = 16            # <file_number, size/offset> locator
+    block_size: int = 4096
+    block_overhead: int = 32
+    index_entry_extra: int = 8     # offset field in index entries
+    footer_bytes: int = 48
+    filter_bits_per_key: int = 10
+
+    # ---- structure sizes ----
+    memtable_bytes: int = 64 << 20
+    ksst_bytes: int = 64 << 20
+    vsst_bytes: int = 256 << 20
+    base_level_bytes: int = 256 << 20   # max_bytes_for_level_base
+    level_ratio: int = 10
+    max_levels: int = 7
+    l0_trigger: int = 4
+    l0_slowdown: int = 12
+    l0_stop: int = 20
+
+    # ---- cache ----
+    cache_bytes: int = 1 << 30
+    cache_high_frac: float = 0.5
+    dropcache_keys: int = 4096
+
+    # ---- KV separation & GC ----
+    sep_threshold: int = 512
+    gc_garbage_ratio: float = 0.2
+    gc_aggressive_ratio: float = 0.05
+    gc_batch_files: int = 4         # max candidate vSSTs merged per GC run
+    blobdb_age_cutoff: float = 0.25
+
+    # ---- space management ----
+    space_quota_bytes: int | None = None
+    soft_quota_frac: float = 0.9
+    slowdown_us_per_write: float = 20.0
+
+    # ---- I/O behaviour ----
+    readahead_gc: bool = False      # paper disables GC readahead by default
+    readahead_compaction: bool = True
+
+    # ---- Scavenger feature flags (paper ablations) ----
+    compensated_compaction: bool | None = None   # None -> per-engine default
+    lazy_read: bool | None = None                # R: RTable dense-index read
+    index_decoupled: bool | None = None          # L: DTable KF/KV split
+    hotcold_write: bool | None = None            # W: DropCache routing
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}")
+        scav = self.engine == "scavenger"
+        if self.compensated_compaction is None:
+            self.compensated_compaction = scav
+        if self.lazy_read is None:
+            self.lazy_read = scav
+        if self.index_decoupled is None:
+            self.index_decoupled = scav
+        if self.hotcold_write is None:
+            self.hotcold_write = scav
+
+    # ------------------------------------------------------------ properties
+    @property
+    def kv_separated(self) -> bool:
+        return self.engine != "rocksdb"
+
+    @property
+    def gc_scheme(self) -> str:
+        return {
+            "rocksdb": "none",
+            "blobdb": "compaction",     # compaction-triggered relocation
+            "titan": "writeback",       # GC rewrites index (Write-Index)
+            "terarkdb": "inherit",      # file-number inheritance, no writeback
+            "scavenger": "inherit",
+        }[self.engine]
+
+    @property
+    def vsst_layout(self) -> str:
+        return "rtable" if self.lazy_read else "btable"
+
+    @property
+    def ksst_layout(self) -> str:
+        return "dtable" if self.index_decoupled else "btable"
+
+    # record serialized sizes --------------------------------------------
+    def inline_rec_bytes(self, vsize):
+        return self.key_bytes + self.seq_bytes + self.rec_header_bytes + vsize
+
+    def ref_rec_bytes(self):
+        return (self.key_bytes + self.seq_bytes + self.rec_header_bytes
+                + self.ref_bytes)
+
+    def tomb_rec_bytes(self):
+        return self.key_bytes + self.seq_bytes + self.rec_header_bytes
+
+    def value_rec_bytes(self, vsize):
+        return self.key_bytes + self.seq_bytes + self.rec_header_bytes + vsize
+
+    # ---------------------------------------------------------------- scaled
+    @classmethod
+    def scaled(cls, engine: str, dataset_bytes: int,
+               scale_ref_gb: float = 100.0, **overrides) -> "EngineConfig":
+        """Shrink the paper's 100GB configuration to ``dataset_bytes``.
+
+        Ratios held: memtable=kSST=dataset/1600, vSST=4x kSST,
+        base level = dataset/400, cache = 1% of dataset.  Block size and
+        record formats stay at their real values.
+        """
+        scale = dataset_bytes / (scale_ref_gb * (1 << 30))
+        mt = max(32 << 10, int((64 << 20) * scale))
+        cfg = dict(
+            engine=engine,
+            memtable_bytes=mt,
+            ksst_bytes=mt,
+            vsst_bytes=4 * mt,
+            base_level_bytes=max(2 * mt, int((256 << 20) * scale)),
+            cache_bytes=max(64 << 10, int(dataset_bytes * 0.01)),
+            dropcache_keys=max(512, int(dataset_bytes / 4096 * 0.02)),
+        )
+        cfg.update(overrides)
+        return cls(**cfg)

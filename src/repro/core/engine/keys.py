@@ -1,0 +1,73 @@
+"""Fixed-width key codec and vectorized hashing.
+
+The paper uses 24-byte string keys.  TPU vector units (and our vectorized
+numpy engine) have no variable-length string compare, so the TPU-native
+layout is fixed-width u64 key lanes; the engine still *accounts* 24 bytes per
+key for space/I-O (``EngineConfig.key_bytes``).  This module provides the
+splitmix64 hash family used by bloom filters and the DropCache, shared with
+the Pallas kernels (``repro.kernels.bloom``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(x: np.ndarray | int) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (u64 -> u64, wrapping)."""
+    with np.errstate(over="ignore"):
+        z = np.asarray(x, dtype=np.uint64) + _SPLITMIX_GAMMA
+        z = (z ^ (z >> np.uint64(30))) * _MIX1
+        z = (z ^ (z >> np.uint64(27))) * _MIX2
+        return z ^ (z >> np.uint64(31))
+
+
+def hash_family(keys: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    """k independent 64-bit hashes per key via double hashing.
+
+    Returns array of shape (k, n) u64.
+    """
+    keys = np.asarray(keys, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        h1 = splitmix64(keys ^ splitmix64(np.uint64(seed)))
+        h2 = splitmix64(h1) | np.uint64(1)  # odd so strides cover the table
+        ks = np.arange(k, dtype=np.uint64)[:, None]
+        return h1[None, :] + ks * h2[None, :]
+
+
+class BloomFilter:
+    """Standard k-hash bloom filter over u64 keys (10 bits/key default).
+
+    Real bit array; false positives occur naturally (and cost wasted block
+    reads in the read path, as in RocksDB).
+    """
+
+    __slots__ = ("nbits", "k", "bits", "nbytes")
+
+    def __init__(self, keys: np.ndarray, bits_per_key: int = 10):
+        n = max(1, len(keys))
+        self.nbits = int(max(64, n * bits_per_key))
+        # round up to u64 words
+        nwords = (self.nbits + 63) // 64
+        self.nbits = nwords * 64
+        self.k = max(1, int(round(bits_per_key * 0.69)))  # ln2 * bits/key
+        self.bits = np.zeros(nwords, dtype=np.uint64)
+        self.nbytes = nwords * 8
+        if len(keys):
+            hs = hash_family(keys, self.k) % np.uint64(self.nbits)
+            word = (hs >> np.uint64(6)).ravel()
+            bit = (hs & np.uint64(63)).ravel()
+            np.bitwise_or.at(self.bits, word, np.uint64(1) << bit)
+
+    def may_contain(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized membership test -> bool array."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+        hs = hash_family(keys, self.k) % np.uint64(self.nbits)
+        word = hs >> np.uint64(6)
+        bit = hs & np.uint64(63)
+        hit = (self.bits[word] >> bit) & np.uint64(1)
+        return hit.all(axis=0)

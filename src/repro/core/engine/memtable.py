@@ -1,0 +1,69 @@
+"""Memtable: in-memory sorted write buffer (dict + sort-at-flush).
+
+Entries are (seq, etype, vid, vsize, vfile).  Normal user puts are INLINE
+(the memtable holds the full value until flush decides separation); Titan's
+GC Write-Index puts REF entries pointing at an existing blob file.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .config import EngineConfig
+from .tables import ETYPE_INLINE, ETYPE_REF, ETYPE_TOMB
+
+
+class Memtable:
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        # key -> (seq, etype, vid, vsize, vfile)
+        self.entries: dict[int, tuple] = {}
+        self.bytes = 0
+
+    def _entry_bytes(self, etype: int, vsize: int) -> int:
+        if etype == ETYPE_TOMB:
+            return self.cfg.tomb_rec_bytes()
+        if etype == ETYPE_REF:
+            return self.cfg.ref_rec_bytes()
+        return self.cfg.inline_rec_bytes(vsize)
+
+    def _set(self, key: int, entry: tuple) -> None:
+        prev = self.entries.get(key)
+        if prev is not None:
+            self.bytes -= self._entry_bytes(prev[1], prev[3])
+        self.entries[key] = entry
+        self.bytes += self._entry_bytes(entry[1], entry[3])
+
+    def put(self, key: int, seq: int, vid: int, vsize: int) -> None:
+        self._set(key, (seq, ETYPE_INLINE, vid, vsize, -1))
+
+    def put_ref(self, key: int, seq: int, vid: int, vsize: int,
+                vfile: int) -> None:
+        self._set(key, (seq, ETYPE_REF, vid, vsize, vfile))
+
+    def delete(self, key: int, seq: int) -> None:
+        self._set(key, (seq, ETYPE_TOMB, 0, 0, -1))
+
+    def get(self, key: int):
+        return self.entries.get(key)
+
+    @property
+    def full(self) -> bool:
+        return self.bytes >= self.cfg.memtable_bytes
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def sorted_arrays(self):
+        """-> (keys, seqs, etype, vids, vsizes, vfiles) sorted by key."""
+        n = len(self.entries)
+        keys = np.fromiter(self.entries.keys(), np.uint64, count=n)
+        order = np.argsort(keys, kind="stable")
+        keys = keys[order]
+        vals = list(self.entries.values())
+        seqs = np.fromiter((v[0] for v in vals), np.uint64, count=n)[order]
+        ety = np.fromiter((v[1] for v in vals), np.uint8, count=n)[order]
+        vids = np.fromiter((v[2] for v in vals), np.uint64, count=n)[order]
+        vsz = np.fromiter((v[3] for v in vals), np.int64, count=n)[order]
+        vf = np.fromiter((v[4] for v in vals), np.int64, count=n)[order]
+        return keys, seqs, ety, vids, vsz, vf

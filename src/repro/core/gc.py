@@ -1,0 +1,172 @@
+"""Garbage collection schemes (paper §II-C, §III-B).
+
+  * inherit (TerarkDB / Scavenger): no index writeback; GC output files
+    inherit from the candidates they merged; reads resolve via the chain.
+      - TerarkDB read step: full vSST scan through the block cache.
+      - Scavenger read step ("lazy read", §III-B.1): RTable dense-index
+        blocks only, then — after GC-Lookup — only the *valid* records,
+        coalesced into runs.
+      - Scavenger write step (§III-B.3): hotness-aware hot/cold vSST split
+        via DropCache.
+  * writeback (Titan): full blob scan with *uncached* reads, validity by
+    exact locator, valid records rewritten and the new locator written back
+    through the foreground path (Write-Index) — extra WAL/memtable/compaction
+    load, the paper's ~38% GC-latency step.
+  * compaction (BlobDB): no standalone GC — relocation happens inside
+    compaction (see ``Store.blobdb_relocate``); blob files are reclaimed only
+    once every reference has been rewritten or dropped.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .engine import io as sio
+from .engine.cache import BlockCache
+from .engine.tables import ETYPE_REF, SSTable
+
+
+class GCGroup:
+    """Inheritance target: the set of output files of one GC run."""
+
+    __slots__ = ("files",)
+
+    def __init__(self, files: list[SSTable]):
+        self.files = files
+
+    def locate(self, key: int, vid: int) -> SSTable | None:
+        for t in self.files:
+            pos = int(t.find(np.array([key], np.uint64))[0])
+            if pos >= 0 and int(t.vids[pos]) == vid:
+                return t
+        return None
+
+
+def gc_candidates(store, threshold: float) -> list[SSTable]:
+    cands = [t for t in store.version.value_files.values()
+             if t.garbage_ratio() >= threshold and t.n > 0]
+    cands.sort(key=lambda t: t.garbage_ratio(), reverse=True)
+    return cands
+
+
+def gc_batch(store, cands: list[SSTable]) -> list[SSTable]:
+    """Batch candidates per GC run: up to ``gc_batch_files`` target-size
+    outputs worth of input (one run models TerarkDB's multi-file GC job)."""
+    budget = store.cfg.gc_batch_files * store.cfg.vsst_bytes
+    batch, acc = [], 0
+    for t in cands:
+        batch.append(t)
+        acc += t.file_bytes
+        if acc >= budget or len(batch) >= 32:
+            break
+    return batch
+
+
+def has_pending(store, threshold: float) -> bool:
+    if store.cfg.gc_scheme in ("none", "compaction"):
+        return False
+    return bool(gc_candidates(store, threshold))
+
+
+def run_gc(store, candidates: list[SSTable]) -> None:
+    cfg = store.cfg
+    io = store.io
+    store.in_gc = True
+    try:
+        # ---------------------------------------------------- 1. Read phase
+        for t in candidates:
+            if cfg.lazy_read and t.layout == "rtable":
+                # Lazy read: dense-index blocks only (§III-B.1).
+                for b in range(t.n_index_blocks):
+                    store.read_block(t, "ib", b, sio.CAT_GC_READ,
+                                     BlockCache.PRI_HIGH,
+                                     t.index_block_bytes())
+            elif cfg.gc_scheme == "writeback":
+                # Titan: direct (uncached) full-file scan.
+                if cfg.readahead_gc:
+                    io.seq_read(t.data_bytes, sio.CAT_GC_READ)
+                else:
+                    for b in range(t.n_data_blocks):
+                        io.rand_read(t.data_block_bytes(0, b),
+                                     sio.CAT_GC_READ)
+            else:
+                # TerarkDB: full scan through the block cache.
+                if cfg.readahead_gc:
+                    io.seq_read(t.data_bytes, sio.CAT_GC_READ)
+                else:
+                    for b in range(t.n_data_blocks):
+                        store.read_block(t, "d0", b, sio.CAT_GC_READ,
+                                         BlockCache.PRI_LOW)
+
+        # ------------------------------------------------ 2. GC-Lookup phase
+        all_keys = np.concatenate([t.keys for t in candidates])
+        all_vids = np.concatenate([t.vids for t in candidates])
+        all_vsz = np.concatenate([t.vsizes for t in candidates])
+        all_rec = np.concatenate([t.rec_bytes for t in candidates])
+        cand_of = np.concatenate([np.full(t.n, i, np.int64)
+                                  for i, t in enumerate(candidates)])
+        res = store.lookup_entries(all_keys, sio.CAT_GC_LOOKUP)
+
+        valid = res["found"] & (res["etype"] == ETYPE_REF) & \
+            (res["vid"] == all_vids)
+        if cfg.gc_scheme == "inherit":
+            # resolve the entry's file number through inheritance chains and
+            # compare with the candidate being collected (§II-B).  Fast path:
+            # the entry usually points directly at the (live) candidate.
+            cand_fids = np.array([t.fid for t in candidates], np.int64)
+            direct = res["vfile"] == cand_fids[cand_of]
+            for i in np.nonzero(valid & ~direct)[0]:
+                head = store.resolve_value_file(int(res["vfile"][i]),
+                                                int(all_keys[i]),
+                                                int(all_vids[i]))
+                if head is None or head.fid != cand_fids[cand_of[i]]:
+                    valid[i] = False
+        else:  # writeback: exact locator match
+            cand_fids = np.array([t.fid for t in candidates], np.int64)
+            valid &= res["vfile"] == cand_fids[cand_of]
+
+        # ------------------------------------- 3. lazy value read (Scavenger)
+        if cfg.lazy_read:
+            for ci, t in enumerate(candidates):
+                pos = np.nonzero(valid & (cand_of == ci))[0]
+                if len(pos) == 0:
+                    continue
+                local = pos - int(np.searchsorted(cand_of, ci, side="left"))
+                runs = np.split(local, np.nonzero(np.diff(local) != 1)[0] + 1)
+                for r in runs:
+                    nbytes = int(t.rec_bytes[r].sum())
+                    if cfg.readahead_gc:
+                        io.seq_read(nbytes, sio.CAT_GC_READ)
+                    else:
+                        io.rand_read(nbytes, sio.CAT_GC_READ)
+
+        # ---------------------------------------------------- 4. Write phase
+        vkeys = all_keys[valid]
+        vvids = all_vids[valid]
+        vvsz = all_vsz[valid]
+        order = np.argsort(vkeys, kind="stable")
+        vkeys, vvids, vvsz = vkeys[order], vvids[order], vvsz[order]
+        new_files, new_fid_per_rec = store.build_value_files(
+            vkeys, vvids, vvsz, sio.CAT_GC_WRITE)
+
+        # --------------------------------- 5. retire candidates / writeback
+        if cfg.gc_scheme == "inherit":
+            group = GCGroup(new_files)
+            for t in candidates:
+                store.version.retire_value_file(t.fid, None)
+                store.chains[t.fid] = group
+                store.cache.erase_file(t.fid)
+        else:  # titan writeback
+            for k, vid, vsz, nf in zip(vkeys.tolist(), vvids.tolist(),
+                                       vvsz.tolist(),
+                                       new_fid_per_rec.tolist()):
+                store.writeback_index(int(k), int(vid), int(vsz), int(nf))
+            for t in candidates:
+                store.version.retire_value_file(t.fid, None)
+                store.cache.erase_file(t.fid)
+
+        store.n_gc_runs += 1
+        store.gc_reclaimed_bytes += sum(t.file_bytes for t in candidates) \
+            - sum(t.file_bytes for t in new_files)
+    finally:
+        store.in_gc = False

@@ -1,0 +1,710 @@
+"""KVStore facade: five selectable engines over one substrate.
+
+``Store(EngineConfig(engine=...))`` gives RocksDB-, BlobDB-, Titan-,
+TerarkDB- or Scavenger-semantics over the same deterministic simulated
+device, so every paper comparison is apples-to-apples.
+
+Scheduling model (see DESIGN.md §3): user operations advance the foreground
+lane; flush/compaction/GC jobs run on a sequential background lane that
+models 16 background threads saturating one SSD.  Background debt surfaces
+as foreground write stalls through the standard RocksDB triggers (immutable
+memtable cap, L0 slowdown/stop) — this is what reproduces the paper's
+delayed-compaction -> hidden-garbage -> space-amplification chain.
+
+All reads return the value's ``vid`` (the identity the store wrote into both
+the index entry and the value record — the stand-in for real value bytes);
+tests compare vids against an external oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import compaction as comp
+from . import gc as gcmod
+from .engine import io as sio
+from .engine.cache import BlockCache, DropCache
+from .engine.config import EngineConfig
+from .engine.io import SimIO
+from .engine.memtable import Memtable
+from .engine.tables import (ETYPE_INLINE, ETYPE_REF, ETYPE_TOMB, SSTable,
+                            build_vsst)
+from .engine.version import Version
+
+MAX_IMMUTABLES = 2
+DELAYED_WRITE_RATE = 16.0   # MB/s, RocksDB default under slowdown
+
+
+class Store:
+    def __init__(self, cfg: EngineConfig, io: SimIO | None = None):
+        self.cfg = cfg
+        self.io = io or SimIO()
+        self.cache = BlockCache(cfg.cache_bytes, cfg.cache_high_frac)
+        self.dropcache = DropCache(cfg.dropcache_keys)
+        self.version = Version(cfg.max_levels)
+        self.memtable = Memtable(cfg)
+        self.immutables: list[Memtable] = []
+        self.chains: dict[int, gcmod.GCGroup] = {}
+        self.seq = 0
+        self.next_vid = 1
+        self.in_gc = False
+        self.compact_cursor: dict[int, int] = {}
+        self._last_bg = "gc"
+
+        # stats / bookkeeping
+        self.latest: dict[int, tuple] = {}   # key -> (vid, vsize): oracle for
+        self.valid_bytes = 0                 # space-amp denominators only
+        self.user_write_bytes = 0
+        self.n_user_ops = 0
+        self.n_compactions = 0
+        self.n_gc_runs = 0
+        self.gc_reclaimed_bytes = 0
+        self.stall_us = 0.0
+
+    # ================================================================== API
+    def put(self, key: int, vsize: int) -> int:
+        """Write key with a value of ``vsize`` bytes; returns the vid."""
+        self._write_pressure()
+        self.seq += 1
+        vid = self.next_vid
+        self.next_vid += 1
+        rec = self.cfg.key_bytes + vsize + 12
+        self.io.seq_write(rec, sio.CAT_WAL)
+        self.user_write_bytes += rec
+        self.n_user_ops += 1
+        self.memtable.put(key, self.seq, vid, vsize)
+        prev = self.latest.get(key)
+        if prev is not None:
+            self.valid_bytes -= prev[1]
+        self.latest[key] = (vid, vsize)
+        self.valid_bytes += vsize
+        self._after_write(rec)
+        return vid
+
+    def delete(self, key: int) -> None:
+        self._write_pressure()
+        self.seq += 1
+        rec = self.cfg.key_bytes + 12
+        self.io.seq_write(rec, sio.CAT_WAL)
+        self.user_write_bytes += rec
+        self.n_user_ops += 1
+        self.memtable.delete(key, self.seq)
+        prev = self.latest.pop(key, None)
+        if prev is not None:
+            self.valid_bytes -= prev[1]
+        self._after_write(rec)
+
+    def get(self, key: int):
+        """-> vid or None."""
+        self.n_user_ops += 1
+        res = self.lookup_entries(np.array([key], np.uint64),
+                                  sio.CAT_FG_READ)
+        self.pump()
+        if not res["found"][0] or res["etype"][0] == ETYPE_TOMB:
+            return None
+        if res["etype"][0] == ETYPE_INLINE:
+            return int(res["vid"][0])
+        return self.read_value(key, int(res["vid"][0]),
+                               int(res["vfile"][0]), int(res["vsize"][0]),
+                               sio.CAT_FG_READ)
+
+    def scan(self, start_key: int, count: int):
+        """Range query: returns up to ``count`` (key, vid) pairs in order.
+
+        Per-source fetch limits adapt upward: dead entries (tombstones,
+        superseded versions) may eat slots, requiring a refill."""
+        self.n_user_ops += 1
+        limit = count
+        for _ in range(32):
+            out, min_excluded = self._scan_once(start_key, count, limit)
+            complete = min_excluded is None or (
+                len(out) >= count and out[-1][0] < min_excluded)
+            if complete:
+                return out
+            limit *= 4
+        return out
+
+    def _scan_once(self, start_key: int, count: int, limit: int):
+        cfg = self.cfg
+        excluded = []       # first key beyond each truncated source
+        pools = []
+        for mt in [self.memtable] + self.immutables:
+            mk = sorted(k for k in mt.entries if k >= start_key)
+            if len(mk) > limit:
+                excluded.append(mk[limit])
+            mk = mk[:limit]
+            if not mk:
+                continue
+            rows = [mt.entries[k] for k in mk]
+            pools.append((None,
+                          np.array(mk, np.uint64),
+                          np.array([r[0] for r in rows], np.uint64),
+                          np.array([r[1] for r in rows], np.uint8),
+                          np.array([r[2] for r in rows], np.uint64),
+                          np.array([r[3] for r in rows], np.int64),
+                          np.array([r[4] for r in rows], np.int64),
+                          None))
+        for lvl in range(cfg.max_levels):
+            for t in self.version.levels[lvl]:
+                a = int(np.searchsorted(t.keys, np.uint64(start_key)))
+                b = min(a + limit, t.n)
+                if a + limit < t.n:
+                    excluded.append(int(t.keys[a + limit]))
+                if a >= b:
+                    continue
+                pos = np.arange(a, b, dtype=np.int64)
+                pools.append((t, t.keys[pos], t.seqs[pos], t.etype[pos],
+                              t.vids[pos], t.vsizes[pos], t.vfiles[pos], pos))
+        min_excluded = min(excluded) if excluded else None
+        if not pools:
+            return [], min_excluded
+        keys = np.concatenate([p[1] for p in pools])
+        seqs = np.concatenate([p[2] for p in pools])
+        ety = np.concatenate([p[3] for p in pools])
+        vids = np.concatenate([p[4] for p in pools])
+        vsz = np.concatenate([p[5] for p in pools])
+        vf = np.concatenate([p[6] for p in pools])
+        src = np.concatenate([np.full(len(p[1]), i, np.int64)
+                              for i, p in enumerate(pools)])
+        pos_all = np.concatenate([
+            p[7] if p[7] is not None else np.full(len(p[1]), -1, np.int64)
+            for p in pools])
+        order = np.lexsort((np.iinfo(np.uint64).max - seqs, keys))
+        keys, ety, vids, vsz, vf, src, pos_all = (
+            a[order] for a in (keys, ety, vids, vsz, vf, src, pos_all))
+        first = np.ones(len(keys), bool)
+        first[1:] = keys[1:] != keys[:-1]
+        live = first & (ety != ETYPE_TOMB)
+        take = np.nonzero(live)[0][:count]
+
+        # ---- I/O: data blocks for chosen rows, value fetches for refs ----
+        for i_pool in np.unique(src[take]):
+            p = pools[i_pool]
+            if p[0] is None:
+                continue
+            t = p[0]
+            rows = take[src[take] == i_pool]
+            self._read_entry_blocks(t, pos_all[rows], ety[rows],
+                                    sio.CAT_SCAN)
+        ref_rows = take[ety[take] == ETYPE_REF]
+        if len(ref_rows):
+            self._read_values_batch(keys[ref_rows], vids[ref_rows],
+                                    vf[ref_rows], vsz[ref_rows],
+                                    sio.CAT_SCAN)
+        self.pump()
+        return (list(zip(keys[take].tolist(), vids[take].tolist())),
+                min_excluded)
+
+    # ===================================================== background lanes
+    def next_compact_job(self):
+        """Work-finder for the flush/compaction pool (16 threads)."""
+        if self.immutables:
+            return ("flush",)
+        pick = comp.pick_compaction(self)
+        if pick is not None:
+            return ("compact", pick)
+        return None
+
+    def next_gc_job(self):
+        """Work-finder for the dedicated GC pool (1-2 threads — Titan/
+        TerarkDB defaults; GC lags ingest, which is the source of the
+        paper's space-amplification backlog)."""
+        if self.cfg.gc_scheme not in ("inherit", "writeback"):
+            return None
+        cands = gcmod.gc_candidates(self, self._gc_threshold())
+        if cands:
+            return ("gc", gcmod.gc_batch(self, cands))
+        return None
+
+    def run_job(self, job, lane: str) -> None:
+        prev_lane = self.io.lane
+        self.io.lane = lane
+        try:
+            if job[0] == "flush":
+                self._flush_job()
+            elif job[0] == "compact":
+                comp.run_compaction(self, *job[1])
+            else:
+                gcmod.run_gc(self, job[1])
+        finally:
+            self.io.lane = prev_lane
+
+    def pump(self) -> None:
+        """Run background jobs that fit before the foreground clock."""
+        while self.io.bg_clock_us < self.io.fg_clock_us:
+            job = self.next_compact_job()
+            if job is None:
+                break
+            self.run_job(job, "bg")
+        while self.io.gc_clock_us < self.io.fg_clock_us:
+            job = self.next_gc_job()
+            if job is None:
+                break
+            self.run_job(job, "gc")
+
+    def _stall_while(self, cond, prefer_gc: bool = False) -> None:
+        """Foreground blocked on background progress."""
+        t0 = self.io.fg_clock_us
+        while cond():
+            if prefer_gc:
+                job, lane = self.next_gc_job(), "gc"
+                if job is None:
+                    job, lane = self.next_compact_job(), "bg"
+            else:
+                job, lane = self.next_compact_job(), "bg"
+                if job is None:
+                    job, lane = self.next_gc_job(), "gc"
+            if job is None:
+                break
+            self.io.lanes[lane] = max(self.io.lanes[lane],
+                                      self.io.fg_clock_us)
+            self.run_job(job, lane)
+            self.io.lanes["fg"] = max(self.io.fg_clock_us,
+                                      self.io.lanes[lane])
+        self.stall_us += self.io.fg_clock_us - t0
+
+    def settle(self) -> None:
+        """Let background catch up to the foreground clock (no fg time)."""
+        self.pump()
+
+    def drain(self) -> None:
+        """Run ALL pending background work and synchronize lanes."""
+        while True:
+            job = self.next_compact_job()
+            lane = "bg"
+            if job is None:
+                job, lane = self.next_gc_job(), "gc"
+            if job is None:
+                break
+            self.run_job(job, lane)
+        m = max(self.io.lanes.values())
+        for k in self.io.lanes:
+            self.io.lanes[k] = m
+
+    # ------------------------------------------------------ write pressure
+    def _after_write(self, rec_bytes: int) -> None:
+        if self.memtable.full:
+            self.immutables.append(self.memtable)
+            self.memtable = Memtable(self.cfg)
+        self.pump()
+        self._stall_while(lambda: len(self.immutables) > MAX_IMMUTABLES)
+        self._stall_while(
+            lambda: len(self.version.levels[0]) >= self.cfg.l0_stop)
+        if len(self.version.levels[0]) >= self.cfg.l0_slowdown:
+            delay = rec_bytes / DELAYED_WRITE_RATE   # us at MB/s
+            self.io.stall(delay)
+            self.stall_us += delay
+            self.pump()
+
+    def _write_pressure(self) -> None:
+        """Space-aware throttling (paper §III-D)."""
+        cfg = self.cfg
+        if cfg.space_quota_bytes is None:
+            return
+        space = self.version.total_bytes()
+        soft = cfg.soft_quota_frac * cfg.space_quota_bytes
+        if space < soft:
+            return
+        if space >= cfg.space_quota_bytes:
+            seen = 0
+
+            def over():
+                nonlocal seen
+                seen += 1
+                return (seen < 256
+                        and self.version.total_bytes()
+                        >= cfg.space_quota_bytes)
+            self._stall_while(over, prefer_gc=True)
+        else:
+            self.io.stall(cfg.slowdown_us_per_write)
+            self.stall_us += cfg.slowdown_us_per_write
+            self.pump()
+
+    def _gc_threshold(self) -> float:
+        cfg = self.cfg
+        if cfg.space_quota_bytes is None:
+            return cfg.gc_garbage_ratio
+        space = self.version.total_bytes()
+        if space >= cfg.soft_quota_frac * cfg.space_quota_bytes:
+            return cfg.gc_aggressive_ratio
+        return cfg.gc_garbage_ratio
+
+    # ================================================================ flush
+    def _flush_job(self) -> None:
+        if not self.immutables:
+            return
+        mt = self.immutables.pop(0)
+        cfg = self.cfg
+        keys, seqs, ety, vids, vsz, vf = mt.sorted_arrays()
+        if cfg.kv_separated:
+            sep = (ety == ETYPE_INLINE) & (vsz >= cfg.sep_threshold)
+            if sep.any():
+                idx = np.nonzero(sep)[0]
+                _, fids = self.build_value_files(keys[idx], vids[idx],
+                                                 vsz[idx], sio.CAT_FLUSH)
+                ety = ety.copy()
+                vf = vf.copy()
+                ety[idx] = ETYPE_REF
+                vf[idx] = fids
+        t = SSTable(cfg, "k", cfg.ksst_layout, keys, seqs, ety, vids, vsz, vf)
+        t.compensated_extra = int(vsz[ety == ETYPE_REF].sum())
+        self.io.seq_write(t.file_bytes, sio.CAT_FLUSH)
+        self.version.add_l0(t)
+
+    def flush(self) -> None:
+        """Force-rotate the memtable and drain all background work."""
+        if len(self.memtable):
+            self.immutables.append(self.memtable)
+            self.memtable = Memtable(self.cfg)
+        self.drain()
+
+    # ======================================================= lookup machinery
+    def lookup_entries(self, keys: np.ndarray, cat: str) -> dict:
+        """Vectorized newest-wins point lookup for a batch of keys.
+
+        Walks memtables -> L0 (newest first) -> L1..Ln with bloom filters and
+        block-cache I/O accounting.  Returns parallel arrays."""
+        n = len(keys)
+        out = {
+            "found": np.zeros(n, bool),
+            "etype": np.full(n, 255, np.uint8),
+            "vid": np.zeros(n, np.uint64),
+            "vsize": np.zeros(n, np.int64),
+            "vfile": np.full(n, -1, np.int64),
+        }
+        unresolved = np.ones(n, bool)
+        tables = [self.memtable] + list(reversed(self.immutables))
+        for i, k in enumerate(keys.tolist()):
+            for mt in tables:
+                e = mt.get(k)
+                if e is not None:
+                    out["found"][i] = True
+                    out["etype"][i] = e[1]
+                    out["vid"][i] = e[2]
+                    out["vsize"][i] = e[3]
+                    out["vfile"][i] = e[4]
+                    unresolved[i] = False
+                    break
+
+        def probe_file(t: SSTable, rows: np.ndarray):
+            may = t.bloom.may_contain(keys[rows])
+            if not may.any():
+                return
+            rows = rows[may]
+            self.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
+                            t.index_block_bytes())
+            pos = t.find(keys[rows])
+            hit = pos >= 0
+            if hit.any():
+                hrows, hpos = rows[hit], pos[hit]
+                self._read_entry_blocks(t, hpos, t.etype[hpos], cat)
+                out["found"][hrows] = True
+                out["etype"][hrows] = t.etype[hpos]
+                out["vid"][hrows] = t.vids[hpos]
+                out["vsize"][hrows] = t.vsizes[hpos]
+                out["vfile"][hrows] = t.vfiles[hpos]
+                unresolved[hrows] = False
+
+        for t in reversed(self.version.levels[0]):
+            if not unresolved.any():
+                break
+            probe_file(t, np.nonzero(unresolved)[0])
+        for lvl in range(1, self.cfg.max_levels):
+            if not unresolved.any():
+                break
+            files = self.version.levels[lvl]
+            if not files:
+                continue
+            rows = np.nonzero(unresolved)[0]
+            fidx = self.version.assign_files(lvl, keys[rows])
+            for fi in np.unique(fidx[fidx >= 0]):
+                probe_file(files[fi], rows[fidx == fi])
+        return out
+
+    def _read_entry_blocks(self, t: SSTable, pos: np.ndarray,
+                           ety: np.ndarray, cat: str) -> None:
+        """Charge data-block reads for entries at ``pos`` in kSST/vSST ``t``.
+
+        DTable routes REF entries to (high-priority) KF blocks and inline
+        records to KV blocks — the paper's GC-Lookup optimisation."""
+        if t.layout == "dtable":
+            streams = np.where(ety == ETYPE_REF, 0, 1)
+            for s, b in {(int(s), int(t.block_of[p]))
+                         for s, p in zip(streams, pos)}:
+                pri = BlockCache.PRI_HIGH if s == 0 else BlockCache.PRI_LOW
+                self.read_block(t, f"d{s}", b, cat, pri,
+                                t.data_block_bytes(s, b))
+        else:
+            for b in np.unique(t.block_of[pos]).tolist():
+                self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW,
+                                t.data_block_bytes(0, b))
+
+    def read_block(self, t: SSTable, stream: str, block_id: int, cat: str,
+                   priority: int, nbytes: int | None = None) -> None:
+        ck = (t.fid, stream, int(block_id))
+        if self.cache.get(ck):
+            self.io.cache_hit(cat)
+            return
+        if nbytes is None:
+            s = int(stream[1])
+            nbytes = t.data_block_bytes(s, block_id)
+        self.io.rand_read(int(nbytes), cat)
+        self.cache.put(ck, int(nbytes), priority)
+
+    # ========================================================== value store
+    def resolve_value_file(self, fid: int, key: int,
+                           vid: int) -> SSTable | None:
+        """Follow GC inheritance chains to the live file holding (key, vid)."""
+        guard = 0
+        while True:
+            t = self.version.value_files.get(fid)
+            if t is not None:
+                return t
+            g = self.chains.get(fid)
+            if g is None:
+                return None
+            nt = g.locate(key, vid)
+            if nt is None:
+                return None
+            fid = nt.fid
+            guard += 1
+            if guard > 10_000:
+                raise RuntimeError("inheritance chain cycle")
+
+    def read_value(self, key: int, vid: int, vfile: int, vsize: int,
+                   cat: str):
+        t = self.resolve_value_file(vfile, key, vid)
+        assert t is not None, f"value file for key {key} lost"
+        pos = int(t.find(np.array([key], np.uint64))[0])
+        assert pos >= 0 and int(t.vids[pos]) == vid, "stale locator"
+        rec = int(t.rec_bytes[pos])
+        if t.layout == "rtable":
+            self.read_block(t, "ib", int(t.index_block_of[pos]), cat,
+                            BlockCache.PRI_HIGH, t.index_block_bytes())
+            self.read_block(t, "rec", pos, cat, BlockCache.PRI_LOW, rec)
+        else:
+            self.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
+                            t.index_block_bytes())
+            b = int(t.block_of[pos])
+            self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW,
+                            max(rec, t.data_block_bytes(0, b)))
+        return vid
+
+    def _read_values_batch(self, keys, vids, vfiles, vsizes, cat) -> None:
+        """Coalesced value fetches for scans."""
+        by_file: dict[int, list[int]] = {}
+        for k, vid, vf in zip(keys.tolist(), vids.tolist(), vfiles.tolist()):
+            t = self.resolve_value_file(int(vf), int(k), int(vid))
+            if t is None:
+                continue
+            pos = int(t.find(np.array([k], np.uint64))[0])
+            if pos >= 0:
+                by_file.setdefault(t.fid, []).append(pos)
+        for fid, poss in by_file.items():
+            t = self.version.value_files[fid]
+            if t.layout == "rtable":
+                for p in sorted(set(poss)):
+                    self.read_block(t, "rec", p, cat, BlockCache.PRI_LOW,
+                                    int(t.rec_bytes[p]))
+            else:
+                for b in np.unique(t.block_of[np.array(poss)]).tolist():
+                    self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW,
+                                    t.data_block_bytes(0, b))
+
+    def build_value_files(self, keys, vids, vsizes, cat: str):
+        """Build vSST(s) from sorted records, hot/cold-split when enabled.
+
+        Returns (files, fid_per_record)."""
+        cfg = self.cfg
+        n = len(keys)
+        fid_per_rec = np.zeros(n, np.int64)
+        files: list[SSTable] = []
+        if n == 0:
+            return files, fid_per_rec
+        if cfg.hotcold_write:
+            hot = self.dropcache.is_hot(keys)
+            classes = [(hot, True), (~hot, False)]
+        else:
+            classes = [(np.ones(n, bool), False)]
+        for mask, is_hot in classes:
+            idx = np.nonzero(mask)[0]
+            if len(idx) == 0:
+                continue
+            rec = cfg.value_rec_bytes(vsizes[idx]).astype(np.int64)
+            cum = np.cumsum(rec) - rec
+            fno = cum // cfg.vsst_bytes
+            for f in np.unique(fno):
+                m = idx[fno == f]
+                t = build_vsst(cfg, keys[m], np.full(len(m), self.seq,
+                                                     np.uint64),
+                               vids[m], vsizes[m], is_hot=is_hot)
+                self.version.add_value_file(t)
+                self.io.seq_write(t.file_bytes, cat)
+                fid_per_rec[m] = t.fid
+                files.append(t)
+        return files, fid_per_rec
+
+    # ===================================================== garbage exposure
+    def expose_garbage(self, keys, ety, vids, vsizes, vfiles) -> None:
+        """Entries dropped during compaction expose value-store garbage
+        (Hidden -> Exposed, paper §II-D)."""
+        cfg = self.cfg
+        refm = ety == ETYPE_REF
+        if not refm.any():
+            return
+        keys, vids, vsizes, vfiles = (keys[refm], vids[refm], vsizes[refm],
+                                      vfiles[refm])
+        for k, vid, vsz, vf in zip(keys.tolist(), vids.tolist(),
+                                   vsizes.tolist(), vfiles.tolist()):
+            t = self.version.value_files.get(int(vf))
+            if t is None:
+                t = self.resolve_value_file(int(vf), int(k), int(vid))
+                if t is None:
+                    continue        # record already dropped by a GC
+            pos = int(t.find(np.array([k], np.uint64))[0])
+            if pos < 0 or int(t.vids[pos]) != vid:
+                continue
+            rec = int(t.rec_bytes[pos])
+            t.garbage_bytes += rec
+            if cfg.gc_scheme == "compaction":
+                t.live_refs -= 1
+                if t.live_refs <= 0:
+                    self.version.retire_value_file(t.fid, None)
+                    self.cache.erase_file(t.fid)
+
+    # ============================================= BlobDB relocation (§II-C)
+    def blobdb_relocate(self, kept):
+        """During compaction, rewrite values whose blob files are old or
+        garbage-heavy; blob files die only when fully exhausted."""
+        cfg = self.cfg
+        keys, seqs, ety, vids, vsz, vf = kept
+        refs = np.nonzero(ety == ETYPE_REF)[0]
+        if len(refs) == 0:
+            return kept
+        live = sorted(self.version.value_files)
+        if not live:
+            return kept
+        cutoff_i = live[int(len(live) * cfg.blobdb_age_cutoff)] \
+            if len(live) > 1 else live[0]
+        reloc_rows = []
+        for i in refs.tolist():
+            t = self.version.value_files.get(int(vf[i]))
+            if t is None:
+                continue
+            # RocksDB BlobDB default: relocation by age cutoff only
+            # (garbage-ratio forcing is disabled) — blob files must exhaust
+            # their data through compaction before being reclaimed (§II-C).
+            if t.fid <= cutoff_i:
+                reloc_rows.append(i)
+        if not reloc_rows:
+            return kept
+        rows = np.array(reloc_rows, np.int64)
+        # read old values
+        for i in rows.tolist():
+            t = self.version.value_files[int(vf[i])]
+            self.io.rand_read(int(cfg.value_rec_bytes(int(vsz[i]))),
+                              sio.CAT_GC_READ)
+        new_files, nfids = self.build_value_files(keys[rows], vids[rows],
+                                                  vsz[rows], sio.CAT_GC_WRITE)
+        # retire refs from the old files
+        for i, nf in zip(rows.tolist(), nfids.tolist()):
+            t = self.version.value_files.get(int(vf[i]))
+            if t is not None:
+                pos = int(t.find(np.array([keys[i]], np.uint64))[0])
+                if pos >= 0 and int(t.vids[pos]) == int(vids[i]):
+                    t.garbage_bytes += int(t.rec_bytes[pos])
+                    t.live_refs -= 1
+                    if t.live_refs <= 0:
+                        self.version.retire_value_file(t.fid, None)
+                        self.cache.erase_file(t.fid)
+            vf[i] = nf
+        return (keys, seqs, ety, vids, vsz, vf)
+
+    # ============================================================ writeback
+    def writeback_index(self, key: int, vid: int, vsize: int,
+                        vfile: int) -> None:
+        """Titan Write-Index: new locator through the foreground write path.
+
+        Each writeback is a Put() — WAL append + memtable insert competing
+        with foreground writes for the WAL/commit path; charged at the
+        unamortized per-op cost (this is why the paper measures ~38% of
+        Titan's GC latency in this step)."""
+        self.seq += 1
+        rec = self.cfg.ref_rec_bytes()
+        self.io.seq_write(rec, sio.CAT_GC_WRITE_INDEX)
+        self.io.stall(self.io.device.seq_op_us, sio.CAT_GC_WRITE_INDEX)
+        self.memtable.put_ref(key, self.seq, vid, vsize, vfile)
+        if self.memtable.full:
+            self.immutables.append(self.memtable)
+            self.memtable = Memtable(self.cfg)
+
+    # ================================================================ stats
+    def space_bytes(self) -> int:
+        return self.version.total_bytes()
+
+    def space_amplification(self) -> float:
+        return self.space_bytes() / max(self.valid_bytes, 1)
+
+    def s_index(self) -> float:
+        """Space amp of the index LSM-tree: total kSST / last-level kSST."""
+        last = self.version.last_nonempty_level()
+        lb = self.version.level_bytes(last)
+        tot = self.version.ksst_total_bytes()
+        return tot / max(lb, 1)
+
+    def exposed_over_valid(self) -> float:
+        ref_valid = max(self.valid_value_bytes(), 1)
+        return self.version.value_garbage_bytes() / ref_valid
+
+    def valid_value_bytes(self) -> int:
+        """Bytes of live (non-garbage) data in the value store."""
+        return sum(t.total_value_bytes - t.garbage_bytes
+                   for t in self.version.value_files.values())
+
+    def hidden_garbage_bytes(self) -> int:
+        """Value bytes referenced by stale index entries whose records are
+        still physically present (not yet exposed/reclaimed) — the paper's
+        G_H.  Uses the stats oracle ``latest`` — measurement only, never an
+        engine decision input."""
+        hidden = 0
+        seen: set = set()
+        for t in self.version.all_kssts():
+            refm = t.etype == ETYPE_REF
+            if not refm.any():
+                continue
+            for k, vid, vsz, vf in zip(t.keys[refm].tolist(),
+                                       t.vids[refm].tolist(),
+                                       t.vsizes[refm].tolist(),
+                                       t.vfiles[refm].tolist()):
+                cur = self.latest.get(k)
+                if cur is not None and cur[0] == vid:
+                    continue                      # live, not garbage
+                if (k, vid) in seen:
+                    continue
+                seen.add((k, vid))
+                vt = self.resolve_value_file(int(vf), int(k), int(vid))
+                if vt is None:
+                    continue                      # already reclaimed by GC
+                hidden += vsz
+        return hidden
+
+    def stats(self) -> dict:
+        wal = self.io.write_bytes.get(sio.CAT_WAL, 0)
+        return {
+            "engine": self.cfg.engine,
+            "clock_s": self.io.clock_us / 1e6,
+            "space_bytes": self.space_bytes(),
+            "valid_bytes": self.valid_bytes,
+            "space_amp": self.space_amplification(),
+            "s_index": self.s_index(),
+            "exposed_over_valid": self.exposed_over_valid(),
+            "write_amp": (self.io.total_write_bytes() - wal)
+            / max(self.user_write_bytes, 1),
+            "read_bytes": self.io.total_read_bytes(),
+            "write_bytes": self.io.total_write_bytes(),
+            "n_compactions": self.n_compactions,
+            "n_gc_runs": self.n_gc_runs,
+            "cache_hit_ratio": self.cache.hit_ratio(),
+            "stall_s": self.stall_us / 1e6,
+            "gc_time_s": self.io.gc_time_us() / 1e6,
+        }

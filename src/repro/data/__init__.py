@@ -1,0 +1,3 @@
+from .pipeline import PipelineConfig, TokenPipeline
+
+__all__ = ["PipelineConfig", "TokenPipeline"]

@@ -1,0 +1,85 @@
+"""Deterministic, resumable, sharded token pipeline.
+
+Design for 1000+-node operation (DESIGN.md §6):
+  * statelessly seeded per (step, host): any host can produce its shard of
+    any step in O(1) — skip-ahead for straggler recovery and elastic
+    rescale (a host joining mid-run needs only (seed, step));
+  * checkpoint state is just the integer step (stored in the Scavenger
+    checkpoint store as a cold key);
+  * synthetic corpus by default (offline container); binary token files
+    (one uint32 array per shard) are memory-mapped when present.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    corpus_dir: str | None = None
+
+
+class TokenPipeline:
+    def __init__(self, cfg: PipelineConfig):
+        assert cfg.global_batch % cfg.n_hosts == 0
+        self.cfg = cfg
+        self.step = 0
+        self._corpus = None
+        if cfg.corpus_dir:
+            files = sorted(Path(cfg.corpus_dir).glob("*.bin"))
+            if files:
+                self._corpus = [np.memmap(f, np.uint32, "r")
+                                for f in files]
+
+    @property
+    def host_batch(self) -> int:
+        return self.cfg.global_batch // self.cfg.n_hosts
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.cfg.seed * 1_000_003 + step) * 31 + self.cfg.host_id)
+
+    def batch_at(self, step: int) -> dict:
+        """O(1) random access — the skip-ahead/elasticity primitive."""
+        c = self.cfg
+        rng = self._rng(step)
+        if self._corpus is not None:
+            rows = []
+            for _ in range(self.host_batch):
+                shard = self._corpus[int(rng.integers(len(self._corpus)))]
+                start = int(rng.integers(0,
+                                         max(1, len(shard) - c.seq_len)))
+                rows.append(np.asarray(shard[start:start + c.seq_len],
+                                       np.int32) % c.vocab)
+            tok = np.stack(rows)
+        else:
+            # synthetic zipf-ish token stream (deterministic)
+            tok = (rng.zipf(1.2, (self.host_batch, c.seq_len)) - 1) \
+                % c.vocab
+            tok = tok.astype(np.int32)
+        return {"tokens": tok}
+
+    def __next__(self) -> dict:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+    def __iter__(self):
+        return self
+
+    # ------------------------------------------------------ checkpointing
+    def state(self) -> dict:
+        return {"step": self.step}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])

@@ -1,0 +1,18 @@
+"""TPU Pallas kernels for the engine's compute hot spots.
+
+Validated in interpret mode on CPU against the pure-jnp oracles in each
+package's ref.py; lowered with explicit BlockSpec VMEM tiling for TPU.
+"""
+
+from .bloom import bloom_build, bloom_probe, bloom_build_ref, bloom_probe_ref
+from .gc_lookup import gc_lookup, gc_lookup_ref
+from .merge import merge_dedup, merge_dedup_ref
+from .partition import hot_cold_partition, hot_cold_partition_ref
+from .paged_gather import page_gather, page_gather_ref
+
+__all__ = [
+    "bloom_build", "bloom_probe", "bloom_build_ref", "bloom_probe_ref",
+    "gc_lookup", "gc_lookup_ref", "merge_dedup", "merge_dedup_ref",
+    "hot_cold_partition", "hot_cold_partition_ref",
+    "page_gather", "page_gather_ref",
+]

@@ -1,0 +1,67 @@
+"""Bloom-filter probe kernel (10 bits/key SSTable filters, paper §IV-A).
+
+TPU adaptation: the filter's u32 words live in VMEM; per-lane word fetch is
+done with one-hot multiply-reduce ("gather via compare+reduce") instead of a
+gather, then bits are tested with shifts.  k hash probes run in a fori loop
+with double hashing (h1 + j*h2), the same family the engine uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import MIX1, MIX2, mix32
+
+QUERY_TILE = 256
+WORD_CHUNK = 512
+
+
+def _kernel(q_ref, bits_ref, out_ref, *, k: int, nbits: int):
+    q = q_ref[...].astype(jnp.uint32)          # (QT, 1)
+    w = bits_ref.shape[0]
+    h1 = mix32(q)
+    h2 = mix32(q ^ MIX1) | jnp.uint32(1)
+    ok = jnp.ones(q.shape, jnp.bool_)
+
+    def probe(j, ok):
+        idx = (h1 + jnp.uint32(j) * h2) % jnp.uint32(nbits)   # (QT,1)
+        word_i = idx >> jnp.uint32(5)
+        bit_i = idx & jnp.uint32(31)
+
+        def fetch(c, acc):
+            chunk = bits_ref[pl.ds(c * WORD_CHUNK, WORD_CHUNK)]
+            base = (c * WORD_CHUNK
+                    + jax.lax.broadcasted_iota(jnp.uint32, (1, WORD_CHUNK),
+                                               1))
+            sel = (word_i == base).astype(jnp.uint32)          # (QT, WC)
+            return acc + (sel * chunk[None, :]).sum(axis=1, keepdims=True)
+
+        word = jax.lax.fori_loop(0, w // WORD_CHUNK, fetch,
+                                 jnp.zeros(q.shape, jnp.uint32))
+        hit = ((word >> bit_i) & jnp.uint32(1)) == jnp.uint32(1)
+        return ok & hit
+
+    out_ref[...] = jax.lax.fori_loop(0, k, probe, ok)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nbits", "interpret"))
+def bloom_probe_pallas(queries, bits, *, k: int, nbits: int, interpret=True):
+    """queries (Q,1) u32, bits (W,) u32 with W % WORD_CHUNK == 0."""
+    q = queries.shape[0]
+    w = bits.shape[0]
+    assert q % QUERY_TILE == 0 and w % WORD_CHUNK == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, nbits=nbits),
+        grid=(q // QUERY_TILE,),
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, 1), jnp.bool_),
+        interpret=interpret,
+    )(queries, bits)

@@ -1,0 +1,34 @@
+"""Jitted wrappers for bloom build/probe."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import QUERY_TILE, WORD_CHUNK, bloom_probe_pallas
+from .ref import bloom_build_ref
+
+
+def bloom_build(keys, bits_per_key: int = 10):
+    """Build filter words for a key set; k = 0.69 * bits/key as the engine.
+    Returns (words u32 (W,), k, nbits) with W padded to the kernel chunk."""
+    keys = jnp.asarray(keys).astype(jnp.uint32)
+    n = max(1, keys.shape[0])
+    nbits = round_up(max(64, n * bits_per_key), 32 * WORD_CHUNK)
+    k = max(1, int(round(bits_per_key * 0.69)))
+    return bloom_build_ref(keys, k, nbits), k, nbits
+
+
+def bloom_probe(queries, words, k: int, nbits: int, *, interpret=None):
+    """-> bool (Q,) may-contain mask."""
+    if interpret is None:
+        interpret = interpret_default()
+    queries = jnp.asarray(queries).astype(jnp.uint32)
+    q = queries.shape[0]
+    if q == 0:
+        return jnp.zeros((0,), bool)
+    qp = round_up(q, QUERY_TILE)
+    qs = pad_to(queries, qp, 0).reshape(qp, 1)
+    out = bloom_probe_pallas(qs, words, k=k, nbits=nbits,
+                             interpret=interpret)
+    return out[:q, 0]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the bloom kernel (build + probe)."""
+
+import jax.numpy as jnp
+
+from ..common import MIX1, mix32
+
+
+def bloom_hashes(keys, k: int, nbits: int):
+    keys = keys.astype(jnp.uint32)
+    h1 = mix32(keys)
+    h2 = mix32(keys ^ MIX1) | jnp.uint32(1)
+    js = jnp.arange(k, dtype=jnp.uint32)[:, None]
+    return (h1[None, :] + js * h2[None, :]) % jnp.uint32(nbits)
+
+
+def bloom_build_ref(keys, k: int, nbits: int):
+    """-> u32 word array of length nbits//32 with key bits set."""
+    assert nbits % 32 == 0
+    idx = bloom_hashes(keys, k, nbits).ravel()
+    words = idx >> jnp.uint32(5)
+    bits = jnp.uint32(1) << (idx & jnp.uint32(31))
+    return _or_scatter(words, bits, nbits // 32)
+
+
+def _or_scatter(words, bits, w):
+    out = jnp.zeros(w, jnp.uint32)
+    for b in range(32):
+        m = jnp.uint32(1) << b
+        hit = (bits & m) != 0
+        contrib = jnp.zeros(w, jnp.uint32).at[words].add(
+            jnp.where(hit, jnp.uint32(1), jnp.uint32(0)))
+        out = out | jnp.where(contrib > 0, m, jnp.uint32(0))
+    return out
+
+
+def bloom_probe_ref(queries, bits_words, k: int, nbits: int):
+    idx = bloom_hashes(queries, k, nbits)          # (k, Q)
+    words = bits_words[idx >> jnp.uint32(5)]
+    hit = (words >> (idx & jnp.uint32(31))) & jnp.uint32(1)
+    return (hit == 1).all(axis=0)

@@ -1,0 +1,107 @@
+"""Shared helpers for the TPU kernels.
+
+TPU adaptation notes (DESIGN.md §3): the engine's u64 keys enter kernels as
+32-bit lanes (the workloads' key spaces are dense ints < 2^32; 24B string
+keys would be dictionary-encoded to u32 at the table level).  TPU vector
+units have no efficient per-lane gather from VMEM, so every kernel is built
+from gather-free primitives:
+
+  * membership/rank  -> tiled compare-and-reduce (brute-force compares beat
+    pointer chasing on the VPU),
+  * bloom word fetch -> one-hot multiply-reduce ("gather via matmul"),
+  * merge/sort       -> bitonic compare-exchange networks at fixed strides,
+  * page fetch       -> block-level dynamic slices driven by scalar-prefetch
+    (the one dynamic-indexing form TPUs do support).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MIX1 = np.uint32(0x85EBCA6B)
+MIX2 = np.uint32(0xC2B2AE35)
+
+
+def interpret_default() -> bool:
+    """Run kernels in interpret mode unless on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer (u32 -> u32), vectorized."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * MIX1
+    x = x ^ (x >> 13)
+    x = x * MIX2
+    return x ^ (x >> 16)
+
+
+def pad_to(x: jnp.ndarray, n: int, fill) -> jnp.ndarray:
+    if x.shape[0] == n:
+        return x
+    pad = jnp.full((n - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def bitonic_merge(keys, *payloads, ascending=True):
+    """Merge a bitonic sequence of length 2^k (log fixed-stride passes)."""
+    n = keys.shape[0]
+    assert (n & (n - 1)) == 0, "power-of-two length required"
+    stride = n // 2
+    while stride >= 1:
+        rows = n // (2 * stride)
+        dir_up = jnp.full((rows,), ascending)
+        keys, payloads = _cmpx(keys, payloads, stride, dir_up)
+        stride //= 2
+    return (keys,) + payloads
+
+
+def _cmpx(keys, payloads, stride, dir_up_row):
+    """One compare-exchange pass at fixed ``stride`` (gather-free:
+    reshape to (rows, 2, stride) and swap halves).  ``dir_up_row`` is a
+    (rows,) bool: ascending rows swap when lo > hi."""
+    n = keys.shape[0]
+    k2 = keys.reshape(-1, 2, stride)
+    lo, hi = k2[:, 0, :], k2[:, 1, :]
+    up = dir_up_row[:, None]
+    swap = jnp.where(up, lo > hi, lo < hi)
+    keys = jnp.stack([jnp.where(swap, hi, lo), jnp.where(swap, lo, hi)],
+                     axis=1).reshape(n)
+    out_p = []
+    for p in payloads:
+        p2 = p.reshape(-1, 2, stride)
+        plo, phi = p2[:, 0, :], p2[:, 1, :]
+        out_p.append(jnp.stack([jnp.where(swap, phi, plo),
+                                jnp.where(swap, plo, phi)],
+                               axis=1).reshape(n))
+    return keys, tuple(out_p)
+
+
+def bitonic_sort(keys, *payloads, ascending=True):
+    """Full bitonic sort network (log^2 fixed-stride passes, gather-free)."""
+    n = keys.shape[0]
+    assert (n & (n - 1)) == 0
+    size = 2
+    while size <= n:
+        stride = size // 2
+        while stride >= 1:
+            rows = n // (2 * stride)
+            row_base = jnp.arange(rows) * (2 * stride)
+            dir_up = ((row_base & size) == 0) == ascending
+            keys, payloads = _cmpx(keys, payloads, stride, dir_up)
+            stride //= 2
+        size *= 2
+    return (keys,) + payloads

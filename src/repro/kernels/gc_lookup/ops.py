@@ -1,0 +1,40 @@
+"""Jitted wrapper: padding + dtype handling for the GC-Lookup kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import CHUNK, QUERY_TILE, gc_lookup_pallas
+
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def gc_lookup(queries, s_keys, s_vids, s_vfiles, *, interpret=None):
+    """Batched point-lookup of ``queries`` in a sorted (keys, vids, vfiles)
+    run.  Accepts engine u64 keys when they fit u32.  Returns numpy-friendly
+    (found bool (Q,), vids u32 (Q,), vfiles u32 (Q,))."""
+    if interpret is None:
+        interpret = interpret_default()
+    queries = jnp.asarray(queries)
+    s_keys = jnp.asarray(s_keys)
+    if queries.dtype == jnp.uint64 or s_keys.dtype == jnp.uint64:
+        assert int(jnp.max(s_keys, initial=0)) < 2**32 - 2, \
+            "u64 keys must be dictionary-encoded to u32 for TPU kernels"
+        queries = queries.astype(jnp.uint32)
+        s_keys = s_keys.astype(jnp.uint32)
+    q = queries.shape[0]
+    n = s_keys.shape[0]
+    if q == 0 or n == 0:
+        z = jnp.zeros((q,), jnp.uint32)
+        return jnp.zeros((q,), bool), z, z
+    qp = round_up(q, QUERY_TILE)
+    np_ = round_up(n, CHUNK)
+    queries_p = pad_to(queries, qp, _SENTINEL).reshape(qp, 1)
+    sk = pad_to(s_keys, np_, _SENTINEL - 1)
+    sv = pad_to(jnp.asarray(s_vids).astype(jnp.uint32), np_, 0)
+    sf = pad_to(jnp.asarray(s_vfiles).astype(jnp.uint32), np_, 0)
+    found, vid, vfile = gc_lookup_pallas(queries_p, sk, sv, sf,
+                                         interpret=interpret)
+    return (found[:q, 0], vid[:q, 0], vfile[:q, 0])

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the GC-Lookup kernel."""
+
+import jax.numpy as jnp
+
+
+def gc_lookup_ref(queries, s_keys, s_vids, s_vfiles):
+    """queries (Q,) u32; sorted run (N,) u32 each.
+    -> (found (Q,), vid (Q,), vfile (Q,))."""
+    pos = jnp.searchsorted(s_keys, queries)
+    pos = jnp.clip(pos, 0, s_keys.shape[0] - 1)
+    found = s_keys[pos] == queries
+    vid = jnp.where(found, s_vids[pos], 0).astype(jnp.uint32)
+    vfile = jnp.where(found, s_vfiles[pos], 0).astype(jnp.uint32)
+    return found, vid, vfile

@@ -1,0 +1,59 @@
+"""Compaction merge kernel: merge two sorted runs, newest-wins dedup.
+
+The compaction inner loop (paper §II-A) is a k-way heap merge on CPUs.  TPU
+adaptation: concat(A, reverse(B)) is a bitonic sequence; a bitonic merge
+network (log2(N) fixed-stride compare-exchange passes, gather-free) sorts it
+while carrying (seq, vid) payloads in lockstep.  Duplicate keys (one version
+per input run) end up adjacent; a neighbour-compare pass emits a keep-mask
+that drops the older sequence number.  Output compaction (masked scatter) is
+left to XLA outside the kernel — scatters don't vectorize on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import bitonic_merge
+
+
+def _kernel(ak_ref, as_ref, av_ref, bk_ref, bs_ref, bv_ref,
+            k_ref, s_ref, v_ref, keep_ref):
+    ak, a_s, av = ak_ref[...], as_ref[...], av_ref[...]
+    bk, b_s, bv = bk_ref[...], bs_ref[...], bv_ref[...]
+    keys = jnp.concatenate([ak, bk[::-1]])
+    seqs = jnp.concatenate([a_s, b_s[::-1]])
+    vids = jnp.concatenate([av, bv[::-1]])
+    keys, seqs, vids = bitonic_merge(keys, seqs, vids, ascending=True)
+    # newest-wins dedup: equal keys are adjacent (<=2 copies, one per run)
+    n = keys.shape[0]
+    prev_k = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, keys.dtype),
+                              keys[:-1]])
+    prev_s = jnp.concatenate([jnp.zeros((1,), seqs.dtype), seqs[:-1]])
+    next_k = jnp.concatenate([keys[1:], jnp.full((1,), 0xFFFFFFFF,
+                                                 keys.dtype)])
+    next_s = jnp.concatenate([seqs[1:], jnp.zeros((1,), seqs.dtype)])
+    dup_prev = (keys == prev_k) & (seqs < prev_s)
+    dup_next = (keys == next_k) & (seqs <= next_s)
+    keep = ~(dup_prev | dup_next)
+    k_ref[...] = keys
+    s_ref[...] = seqs
+    v_ref[...] = vids
+    keep_ref[...] = keep
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_dedup_pallas(ak, aseq, avid, bk, bseq, bvid, *, interpret=True):
+    """Two sorted runs (padded to equal power-of-two halves) -> merged
+    sorted arrays + keep mask.  All inputs u32 (N,)."""
+    n = ak.shape[0] + bk.shape[0]
+    assert (n & (n - 1)) == 0, "total length must be a power of two"
+    out = jax.ShapeDtypeStruct((n,), jnp.uint32)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=[out, out, out, jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        interpret=interpret,
+    )(ak, aseq, avid, bk, bseq, bvid)

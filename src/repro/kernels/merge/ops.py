@@ -1,0 +1,32 @@
+"""Jitted wrapper for the merge kernel: padding to power-of-two halves."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import interpret_default, next_pow2, pad_to
+from .kernel import merge_dedup_pallas
+
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def merge_dedup(ak, aseq, avid, bk, bseq, bvid, *, interpret=None):
+    """Merge two sorted (keys, seqs, vids) runs with newest-wins dedup.
+    Returns (keys, seqs, vids, keep) trimmed of padding; padded sentinel
+    entries sort to the end and are removed before returning."""
+    if interpret is None:
+        interpret = interpret_default()
+    ak = jnp.asarray(ak).astype(jnp.uint32)
+    bk = jnp.asarray(bk).astype(jnp.uint32)
+    na, nb = ak.shape[0], bk.shape[0]
+    half = next_pow2(max(na, nb, 1))
+    a = [pad_to(ak, half, _SENTINEL),
+         pad_to(jnp.asarray(aseq).astype(jnp.uint32), half, 0),
+         pad_to(jnp.asarray(avid).astype(jnp.uint32), half, 0)]
+    b = [pad_to(bk, half, _SENTINEL),
+         pad_to(jnp.asarray(bseq).astype(jnp.uint32), half, 0),
+         pad_to(jnp.asarray(bvid).astype(jnp.uint32), half, 0)]
+    keys, seqs, vids, keep = merge_dedup_pallas(*a, *b, interpret=interpret)
+    n = na + nb
+    return keys[:n], seqs[:n], vids[:n], keep[:n]

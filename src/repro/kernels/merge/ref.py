@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the merge kernel."""
+
+import jax.numpy as jnp
+
+
+def merge_dedup_ref(ak, aseq, avid, bk, bseq, bvid):
+    """Merge two sorted runs with newest-wins dedup.
+    -> (keys, seqs, vids, keep) all length len(a)+len(b), sorted by
+    (key asc, seq desc); keep marks the surviving copy of each key."""
+    keys = jnp.concatenate([ak, bk])
+    seqs = jnp.concatenate([aseq, bseq])
+    vids = jnp.concatenate([avid, bvid])
+    order = jnp.lexsort((jnp.uint32(0xFFFFFFFF) - seqs, keys))
+    keys, seqs, vids = keys[order], seqs[order], vids[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]])
+    return keys, seqs, vids, first

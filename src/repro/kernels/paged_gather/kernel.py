@@ -1,0 +1,51 @@
+"""Paged KV-cache gather kernel (serving substrate).
+
+The Scavenger-style paged KV-cache manager stores per-sequence KV blocks in
+a global page pool (pages = vSSTs, page table = index LSM-tree; see
+DESIGN.md §3/§4).  Attention needs each sequence's pages contiguous.  On TPU
+the page-table indirection uses the one supported dynamic-indexing form:
+block-level dynamic slices driven by scalar-prefetched indices
+(PrefetchScalarGridSpec) — the same pattern as TPU paged attention.
+
+Grid: (batch, pages_per_seq); each step copies one (page_size, head_dim)
+page from the pool position named by the page table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(table_ref, pages_ref, out_ref):
+    del table_ref          # consumed by the index_map
+    out_ref[...] = pages_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather_pallas(page_table, pages, *, interpret=True):
+    """page_table (B, P) i32 -> out (B, P*page_size, D) gathering
+    pages (N, page_size, D)."""
+    b, p = page_table.shape
+    n, page_size, d = pages.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((None, page_size, d),
+                         lambda i, j, table: (table[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, page_size, d),
+                               lambda i, j, table: (i, j, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, p * page_size, d), pages.dtype),
+        interpret=interpret,
+    )(page_table, pages)
+    return out

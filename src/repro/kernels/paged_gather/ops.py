@@ -1,0 +1,21 @@
+"""Jitted wrapper for the paged gather kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import interpret_default
+from .kernel import page_gather_pallas
+
+
+def page_gather(page_table, pages, *, interpret=None):
+    """Gather KV pages into per-sequence contiguous buffers.
+
+    page_table (B, P) int32 (entries index ``pages``; unused slots should
+    point at a zero page), pages (N, page_size, D).
+    Returns (B, P*page_size, D)."""
+    if interpret is None:
+        interpret = interpret_default()
+    page_table = jnp.asarray(page_table).astype(jnp.int32)
+    pages = jnp.asarray(pages)
+    return page_gather_pallas(page_table, pages, interpret=interpret)

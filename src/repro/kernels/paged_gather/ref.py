@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the paged gather kernel."""
+
+import jax.numpy as jnp
+
+
+def page_gather_ref(page_table, pages):
+    """page_table (B, P) i32, pages (N, page_size, D)
+    -> (B, P*page_size, D)."""
+    b, p = page_table.shape
+    _, page_size, d = pages.shape
+    g = pages[page_table.reshape(-1)]            # (B*P, page_size, D)
+    return g.reshape(b, p * page_size, d)

@@ -1,0 +1,47 @@
+"""Hot/cold partition kernel (DropCache routing at Flush/GC, §III-B.3).
+
+Scavenger writes hot-update records and cold records to separate vSSTs.
+A stable partition is a scatter on CPUs; on TPU we sort a composite key
+``(is_cold << log2(n)) | position`` with a gather-free bitonic network,
+carrying the record payloads.  Hot records keep their relative order in the
+prefix, cold in the suffix — exactly a stable partition.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import bitonic_sort
+
+
+def _kernel(keys_ref, hot_ref, vid_ref, vsz_ref,
+            okeys_ref, ovid_ref, ovsz_ref, count_ref):
+    keys = keys_ref[...]
+    hot = hot_ref[...]
+    n = keys.shape[0]
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (n,), 0)
+    comp = jnp.where(hot, pos, pos + jnp.uint32(n))
+    comp, keys, vid, vsz = bitonic_sort(comp, keys, vid_ref[...],
+                                        vsz_ref[...], ascending=True)
+    okeys_ref[...] = keys
+    ovid_ref[...] = vid
+    ovsz_ref[...] = vsz
+    count_ref[...] = hot.astype(jnp.uint32).sum()[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hot_cold_partition_pallas(keys, hot, vids, vsizes, *, interpret=True):
+    """All inputs (N,) with N a power of two.  Returns (keys, vids, vsizes)
+    stably partitioned hot-first plus the hot count."""
+    n = keys.shape[0]
+    assert (n & (n - 1)) == 0
+    out = jax.ShapeDtypeStruct((n,), jnp.uint32)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=[out, out, out, jax.ShapeDtypeStruct((1,), jnp.uint32)],
+        interpret=interpret,
+    )(keys, hot, vids, vsizes)

@@ -1,0 +1,28 @@
+"""Jitted wrapper for the hot/cold partition kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import interpret_default, next_pow2, pad_to
+from .kernel import hot_cold_partition_pallas
+
+
+def hot_cold_partition(keys, hot, vids, vsizes, *, interpret=None):
+    """Stable hot-first partition. Returns (keys, vids, vsizes, n_hot),
+    trimmed of padding (pads are cold entries at the very end)."""
+    if interpret is None:
+        interpret = interpret_default()
+    keys = jnp.asarray(keys).astype(jnp.uint32)
+    n = keys.shape[0]
+    if n == 0:
+        z = jnp.zeros((0,), jnp.uint32)
+        return z, z, z, jnp.uint32(0)
+    npow = next_pow2(n)
+    ks = pad_to(keys, npow, 0)
+    ht = pad_to(jnp.asarray(hot).astype(bool), npow, False)
+    vd = pad_to(jnp.asarray(vids).astype(jnp.uint32), npow, 0)
+    vs = pad_to(jnp.asarray(vsizes).astype(jnp.uint32), npow, 0)
+    okeys, ovid, ovsz, cnt = hot_cold_partition_pallas(
+        ks, ht, vd, vs, interpret=interpret)
+    return okeys[:n], ovid[:n], ovsz[:n], cnt[0]

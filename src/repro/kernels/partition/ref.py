@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the partition kernel."""
+
+import jax.numpy as jnp
+
+
+def hot_cold_partition_ref(keys, hot, vids, vsizes):
+    order = jnp.argsort(jnp.where(hot, 0, 1), stable=True)
+    return (keys[order], vids[order], vsizes[order],
+            hot.astype(jnp.uint32).sum())

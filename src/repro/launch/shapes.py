@@ -1,0 +1,82 @@
+"""Assigned input-shape catalog + abstract input construction.
+
+LM transformer shapes are seq_len x global_batch; ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``; ``prefill_32k`` lowers ``prefill``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# per-arch training memory knobs for the big configs (see EXPERIMENTS.md)
+TRAIN_OVERRIDES = {
+    "arctic-480b": dict(accum_steps=8, moment_dtype="bfloat16"),
+    "jamba-1.5-large-398b": dict(accum_steps=8, moment_dtype="bfloat16"),
+    "phi3.5-moe-42b-a6.6b": dict(accum_steps=4, moment_dtype="bfloat16"),
+    "llava-next-mistral-7b": dict(accum_steps=4, moment_dtype="float32"),
+}
+
+
+def runnable(cfg, shape_name: str) -> tuple[bool, str]:
+    """Whether (arch x shape) is a valid cell (DESIGN.md §5 skips)."""
+    s = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode skipped"
+    if s["kind"] == "decode" and cfg.family == "vlm" \
+            and shape_name == "long_500k" and cfg.window is None:
+        return False, "vlm without windowed attention"
+    return True, ""
+
+
+def train_batch_specs(cfg, seq: int, batch: int):
+    """ShapeDtypeStruct stand-ins for one global training batch."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.enc_dec:
+        return {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16),
+                "tokens": tok}
+    if cfg.modality == "vlm":
+        p = min(cfg.n_patches, seq // 2)
+        return {"patches": jax.ShapeDtypeStruct((batch, p, cfg.d_model),
+                                                jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((batch, seq - p), jnp.int32)}
+    return {"tokens": tok}
+
+
+def decode_batch_specs(cfg, batch: int):
+    return {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_len_for(cfg, shape_name: str) -> int:
+    seq = SHAPES[shape_name]["seq"]
+    if shape_name == "long_500k" and cfg.window is not None:
+        return cfg.window                 # rolling ring (mistral SWA)
+    return seq
+
+
+def input_specs(cfg, shape_name: str, model=None):
+    """-> (kind, specs dict) for lowering; decode includes 'cache'."""
+    s = SHAPES[shape_name]
+    if s["kind"] == "train":
+        return "train", {"batch": train_batch_specs(cfg, s["seq"],
+                                                    s["batch"])}
+    if s["kind"] == "prefill":
+        return "prefill", {"batch": train_batch_specs(cfg, s["seq"],
+                                                      s["batch"])}
+    cache_len = cache_len_for(cfg, shape_name)
+    enc_len = s["seq"] if cfg.enc_dec else 0
+    cache = model.cache_shapes(s["batch"], cache_len, enc_len=enc_len)
+    return "decode", {"batch": decode_batch_specs(cfg, s["batch"]),
+                      "cache": cache}

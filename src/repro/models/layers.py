@@ -1,0 +1,476 @@
+"""Core layers: norms, RoPE, GQA attention (cached / windowed), dense and
+MoE FFNs — pure-JAX functional style.
+
+Params are nested dicts of arrays.  Every init_* has a matching spec_*
+returning the same structure with per-dim sharding *roles*:
+  'fsdp' (shard over the data/pod axes), 'tp' (tensor-parallel axis),
+  'exp' (expert-parallel, mapped to the tp axis), or None.
+The launch layer resolves roles to mesh axes (launch/mesh.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ----------------------------------------------------------------- context
+@dataclasses.dataclass
+class ShardCtx:
+    """Activation-sharding context; no-op when mesh is None."""
+    mesh: object = None
+    batch_axes: tuple = ("data",)
+    tp_axis: str | None = "model"
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def constrain(self, x, *roles):
+        if self.mesh is None:
+            return x
+        dims = []
+        for dim_size, r in zip(x.shape, roles):
+            ax = (self.batch_axes if r == "batch"
+                  else self.tp_axis if r == "tp" else None)
+            # only shard dims that divide evenly (smoke meshes, odd heads)
+            if ax is not None and dim_size % self._axis_size(ax) != 0:
+                ax = None
+            dims.append(ax)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*dims)))
+
+
+NO_CTX = ShardCtx(mesh=None)
+
+
+# ------------------------------------------------------------------- inits
+def _dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if in_axis is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, bias=False, dtype=jnp.float32):
+    p = {"w": _dense_init(key, (d_in, d_out), 0, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def spec_linear(bias=False, in_role="fsdp", out_role="tp"):
+    s = {"w": (in_role, out_role)}
+    if bias:
+        s["b"] = (out_role,)
+    return s
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(d, kind="rms", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def spec_norm(kind="rms"):
+    s = {"scale": (None,)}
+    if kind == "ln":
+        s["bias"] = (None,)
+    return s
+
+
+def apply_norm(p, x, kind="rms", eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if kind == "ln":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope_angles(positions, hd, theta=10000.0):
+    """positions (...,) -> (cos, sin) of shape (..., hd//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B,S,H,hd); cos/sin (B,S,hd//2) or (S,hd//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal_pos(seq, d, dtype):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------- attention
+def init_attention(key, cfg, dtype, cross=False):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, cfg.qkv_bias, dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, cfg.qkv_bias,
+                          dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, cfg.qkv_bias,
+                          dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, False, dtype),
+    }
+
+
+def spec_attention(cfg):
+    return {
+        "wq": spec_linear(cfg.qkv_bias, "fsdp", "tp"),
+        "wk": spec_linear(cfg.qkv_bias, "fsdp", "tp"),
+        "wv": spec_linear(cfg.qkv_bias, "fsdp", "tp"),
+        "wo": spec_linear(False, "tp", "fsdp"),
+    }
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, kh, n_rep, hd)).reshape(b, s, kh * n_rep,
+                                                           hd)
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd), mask broadcastable (B,1,Sq,Sk)."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_grouped(q, k, v, mask, n_rep):
+    """GQA without materializing repeated KV heads: q regrouped to
+    (B,Sq,K,G,hd) and contracted against k/v (B,Sk,K,hd) directly.
+    Cuts the decode memory term by G (§Perf iteration 'gqa_grouped').
+    Inputs stay in cache dtype (bf16 on TPU) with f32 accumulation —
+    upcasting inputs makes XLA hoist a whole-cache convert (§Perf log)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    qg = (q.astype(jnp.float32) / math.sqrt(hd)).astype(k.dtype)
+    qg = qg.reshape(b, sq, kh, n_rep, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                       logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, hd).astype(v.dtype)
+
+
+CHUNK_KV = 1024
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, window, n_rep, chunk=CHUNK_KV):
+    """Flash-style attention: lax.scan over KV chunks with running
+    (max, sum, acc) — never materializes the (Sq, Sk) score matrix
+    (§Perf iteration 'attn_impl=chunked').  Grouped GQA built in.
+    q (B,Sq,H,hd); k/v (B,Sk,K,hd); positions give causal/window masks."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kh = k.shape[2]
+    if sk % chunk != 0:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(
+            jnp.int32).max)
+        sk += pad
+    nc = sk // chunk
+    qg = (q.astype(jnp.float32) / math.sqrt(hd)).astype(k.dtype)
+    qg = qg.reshape(b, sq, kh, n_rep, hd)
+    kc = k.reshape(b, nc, chunk, kh, hd).swapaxes(0, 1)
+    vc = v.reshape(b, nc, chunk, kh, hd).swapaxes(0, 1)
+    pc = k_pos.reshape(nc, chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        # cache-dtype inputs, f32 accumulation (MXU-native; input upcasts
+        # get hoisted into whole-cache converts by XLA)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kb,
+                       preferred_element_type=jnp.float32)
+        valid = pb[None, :] <= q_pos[:, None]
+        if window is not None:
+            valid &= (q_pos[:, None] - pb[None, :]) < window
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        m2 = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + p.sum(axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((b, kh, n_rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, n_rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, n_rep, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(v.dtype)
+
+
+def attention(p, x, cfg, ctx, *, causal=True, positions=None,
+              cache=None, cache_pos=None, kv_src=None, cross=False):
+    """GQA attention.
+
+    Self-attention decode: ``cache`` dict(k, v) (B, S_cache, K, hd) — the
+    new token is written at ``cache_pos`` (rolling slot for sliding-window
+    configs, keys are rope'd at write time with absolute positions), then
+    attends over the valid prefix.
+    Cross-attention (``cross=True``): keys/values come from ``kv_src``
+    (encoder output) or, at decode, from a precomputed ``cache``.
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = linear(p["wq"], x).reshape(b, s, nh, hd)
+    if cross and kv_src is None:
+        k, v = cache["k"], cache["v"]                  # precomputed cross kv
+    else:
+        src = kv_src if cross else x
+        k = linear(p["wk"], src).reshape(b, -1, nkv, hd)
+        v = linear(p["wv"], src).reshape(b, -1, nkv, hd)
+
+    if positions is None:
+        positions = jnp.arange(s)
+    if cfg.rope and not cross:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = cache
+    rolling = False
+    kv_positions = None
+    if cross:
+        if kv_src is not None and cache is not None:
+            new_cache = {"k": k, "v": v}
+        mask = jnp.ones((1, 1, 1, 1), bool)            # full cross attention
+    elif cache is not None:
+        s_cache = cache["k"].shape[1]
+        rolling = cfg.window is not None and s_cache == cfg.window
+        if rolling:
+            assert s == 1, "rolling-window cache supports single-token decode"
+            slot = cache_pos % s_cache
+        else:
+            slot = cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        idx = jnp.arange(s_cache)
+        kv_positions = idx
+        if rolling:
+            # all slots valid once the ring has wrapped
+            valid = ((idx <= cache_pos) | (cache_pos >= s_cache - 1))[
+                None, :]
+        else:
+            # positions are the absolute query positions (s of them,
+            # starting at cache_pos) — supports multi-token prefill
+            valid = idx[None, :] <= positions[:, None]
+            if cfg.window is not None:
+                valid &= (positions[:, None] - idx[None, :]) < cfg.window
+        mask = valid[None, None, :, :] if valid.ndim == 2 else \
+            valid[None, None, None, :]
+    else:
+        sk = k.shape[1]
+        kv_positions = jnp.arange(sk)
+        qi = positions[:, None]
+        ki = kv_positions[None, :]
+        if causal:
+            m = ki <= qi
+            if cfg.window is not None:
+                m = m & (qi - ki < cfg.window)
+        else:
+            m = jnp.ones((s, sk), bool)
+        mask = m[None, None, :, :]
+
+    n_rep = nh // nkv
+    # chunked attention pays off for multi-token queries (train/prefill);
+    # single-token decode's score matrix is small — the grouped path
+    # (selected via cfg.gqa_grouped in opt mode) handles it instead
+    use_chunked = (cfg.attn_impl == "chunked" and not cross and not rolling
+                   and s > 1 and k.shape[1] >= 2 * CHUNK_KV)
+    if use_chunked:
+        if causal or cache is not None:
+            q_pos = positions
+        else:
+            q_pos = jnp.full((s,), jnp.iinfo(jnp.int32).max - 1)
+        out = _sdpa_chunked(q, k, v, q_pos, kv_positions, cfg.window,
+                            n_rep)
+    elif cfg.gqa_grouped and n_rep > 1:
+        out = _sdpa_grouped(q, k, v, mask, n_rep)
+    else:
+        k = _repeat_kv(k, n_rep)
+        v = _repeat_kv(v, n_rep)
+        out = _sdpa(q, k, v, mask)
+    out = ctx.constrain(out.reshape(b, s, nh * hd), "batch", None, "tp")
+    return linear(p["wo"], out), new_cache
+
+
+# --------------------------------------------------------------- dense FFN
+def init_ffn(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"w1": init_linear(ks[0], d, f, False, dtype),
+                "w3": init_linear(ks[1], d, f, False, dtype),
+                "w2": init_linear(ks[2], f, d, False, dtype)}
+    return {"w1": init_linear(ks[0], d, f, True, dtype),
+            "w2": init_linear(ks[2], f, d, True, dtype)}
+
+
+def spec_ffn(cfg):
+    if cfg.act == "swiglu":
+        return {"w1": spec_linear(False, "fsdp", "tp"),
+                "w3": spec_linear(False, "fsdp", "tp"),
+                "w2": spec_linear(False, "tp", "fsdp")}
+    return {"w1": spec_linear(True, "fsdp", "tp"),
+            "w2": spec_linear(True, "tp", "fsdp")}
+
+
+def ffn(p, x, cfg, ctx):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(linear(p["w1"], x)) * linear(p["w3"], x)
+    else:
+        h = jax.nn.gelu(linear(p["w1"], x))
+    h = ctx.constrain(h, "batch", None, "tp")
+    return linear(p["w2"], h)
+
+
+# ---------------------------------------------------------------- MoE FFN
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "wg": init_linear(ks[0], d, e, False, dtype),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * std).astype(dtype),
+        "w2": (jax.random.normal(ks[2], (e, f, d))
+               / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = (jax.random.normal(ks[3], (e, d, f)) * std).astype(dtype)
+    return p
+
+
+def spec_moe(cfg):
+    s = {"wg": spec_linear(False, "fsdp", None),
+         "w1": ("exp", "fsdp", None),
+         "w2": ("exp", None, "fsdp")}
+    if cfg.act == "swiglu":
+        s["w3"] = ("exp", "fsdp", None)
+    return s
+
+
+def moe_ffn(p, x, cfg, ctx):
+    """Top-k expert routing with static capacity (GShard-style, sort-based
+    dispatch so FLOPs stay ~6*N_active*D — see DESIGN.md §5)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    gates = jax.nn.softmax(
+        linear(p["wg"], xf).astype(jnp.float32), axis=-1)   # (T, E)
+    topv, topi = jax.lax.top_k(gates, k)                     # (T, k)
+    topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(k * t / e * cfg.capacity_factor))
+    cap = max(cap, 1)
+
+    # flatten assignments, sort by expert, compute slot in expert buffer
+    eid = topi.reshape(-1)                                   # (T*k,)
+    tok = jnp.repeat(jnp.arange(t), k)
+    wgt = topv.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, wgt_s = eid[order], tok[order], wgt[order]
+    # position within expert segment
+    seg_start = jnp.searchsorted(eid_s, jnp.arange(e))       # (E,)
+    pos_in_e = jnp.arange(t * k) - seg_start[eid_s]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, eid_s * cap + pos_in_e, e * cap)  # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(
+        xf[tok_s])
+    # expert-parallel: shard the expert dim over the tp axis (all-to-all)
+    buf = ctx.constrain(buf[: e * cap].reshape(e, cap, d), "tp", None, None)
+
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(x.dtype))
+    if cfg.act == "swiglu":
+        h1 = jax.nn.silu(h1) * jnp.einsum("ecd,edf->ecf", buf,
+                                          p["w3"].astype(x.dtype))
+    else:
+        h1 = jax.nn.gelu(h1)
+    out_e = jnp.einsum("ecf,efd->ecd", h1, p["w2"].astype(x.dtype))
+
+    flat = jnp.concatenate([out_e.reshape(e * cap, d),
+                            jnp.zeros((1, d), x.dtype)], axis=0)
+    contrib = flat[slot] * wgt_s[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok_s].add(
+        jnp.where(keep[:, None], contrib, 0))
+    return y.reshape(b, s, d)
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits, labels, vocab_real):
+    """logits (B,S,Vp); labels (B,S) with -1 = ignore (modality frontends,
+    padding).  Padded vocab columns are masked out of the softmax."""
+    vp = logits.shape[-1]
+    if vp > vocab_real:
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < vocab_real, logits, -1e30)
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,379 @@
+"""Model assembly: decoder-only LMs (dense/MoE/hybrid/SSM), whisper
+encoder-decoder, llava VLM backbone — all from one ModelConfig.
+
+Layers are stacked per *period* (config.block_pattern) and compiled with a
+single ``lax.scan`` over periods (one XLA While body per arch, essential for
+512-device compile times); the period body is rematerialized.
+
+Public surface:
+  build_model(cfg) -> Model with
+    init_params / abstract_params / param_specs
+    loss(params, batch)                      # training forward + CE
+    forward(params, batch)                   # logits
+    prefill(params, batch)  -> (logits, cache)
+    serve_step(params, cache, batch)-> (logits, cache)
+    cache_shapes(batch_size, cache_len)
+    input_specs(shape_name ...)  — see launch/dryrun.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from .config import ModelConfig
+from .layers import (NO_CTX, ShardCtx, apply_norm, attention, cross_entropy,
+                     ffn, init_attention, init_ffn, init_linear, init_moe,
+                     init_norm, linear, moe_ffn, sinusoidal_pos,
+                     spec_attention, spec_ffn, spec_linear, spec_moe,
+                     spec_norm)
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+# ========================================================== period building
+def _init_slot(key, cfg, kind, ffn_kind, dtype, cross=False):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm.init_mamba(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = ssm.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = ssm.init_slstm(ks[0], cfg, dtype)
+    if cross:
+        p["ln_x"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        p["xattn"] = init_attention(ks[1], cfg, dtype)
+    if ffn_kind != "none":
+        p["ln2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        if ffn_kind in ("dense", "moe+dense"):
+            p["ffn"] = init_ffn(ks[2], cfg, dtype)
+        if ffn_kind in ("moe", "moe+dense"):
+            p["moe"] = init_moe(ks[3], cfg, dtype)
+    return p
+
+
+def _spec_slot(cfg, kind, ffn_kind, cross=False):
+    s = {"ln1": spec_norm(cfg.norm)}
+    if kind == "attn":
+        s["attn"] = spec_attention(cfg)
+    elif kind == "mamba":
+        s["mamba"] = ssm.spec_mamba(cfg)
+    elif kind == "mlstm":
+        s["mlstm"] = ssm.spec_mlstm(cfg)
+    elif kind == "slstm":
+        s["slstm"] = ssm.spec_slstm(cfg)
+    if cross:
+        s["ln_x"] = spec_norm(cfg.norm)
+        s["xattn"] = spec_attention(cfg)
+    if ffn_kind != "none":
+        s["ln2"] = spec_norm(cfg.norm)
+        if ffn_kind in ("dense", "moe+dense"):
+            s["ffn"] = spec_ffn(cfg)
+        if ffn_kind in ("moe", "moe+dense"):
+            s["moe"] = spec_moe(cfg)
+    return s
+
+
+def _slot_forward(p, x, cfg, ctx, kind, ffn_kind, *, causal=True,
+                  positions=None, cache=None, cache_pos=None, enc=None):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if kind == "attn":
+        y, new_cache = attention(p["attn"], h, cfg, ctx, causal=causal,
+                                 positions=positions, cache=cache,
+                                 cache_pos=cache_pos)
+    elif kind == "mamba":
+        y, new_cache = ssm.mamba_forward(p["mamba"], h, cfg, ctx,
+                                         cache=cache)
+    elif kind == "mlstm":
+        y, new_cache = ssm.mlstm_forward(p["mlstm"], h, cfg, ctx,
+                                         cache=cache)
+    else:
+        y, new_cache = ssm.slstm_forward(p["slstm"], h, cfg, ctx,
+                                         cache=cache)
+    x = x + y
+    if "xattn" in p:
+        h = apply_norm(p["ln_x"], x, cfg.norm)
+        xc = cache.get("xcache") if isinstance(cache, dict) else None
+        y, new_xc = attention(p["xattn"], h, cfg, ctx, cross=True,
+                              kv_src=enc, cache=xc)
+        x = x + y
+        if new_cache is None:
+            new_cache = {}
+        if xc is not None or enc is not None:
+            new_cache = dict(new_cache or {})
+            new_cache["xcache"] = new_xc if new_xc is not None else xc
+    if ffn_kind != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        y = 0.0
+        if "moe" in p:
+            y = y + moe_ffn(p["moe"], h, cfg, ctx)
+        if "ffn" in p:
+            y = y + ffn(p["ffn"], h, cfg, ctx)
+        x = x + y
+    return x, new_cache
+
+
+def _slot_cache_shape(cfg, kind, batch, cache_len, dtype, cross=False,
+                      enc_len=0):
+    if kind == "attn":
+        c = {"k": jax.ShapeDtypeStruct(
+                (batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype),
+             "v": jax.ShapeDtypeStruct(
+                (batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype)}
+    elif kind == "mamba":
+        c = ssm.mamba_cache_shape(cfg, batch, dtype)
+    elif kind == "mlstm":
+        c = ssm.mlstm_cache_shape(cfg, batch, dtype)
+    else:
+        c = ssm.slstm_cache_shape(cfg, batch, dtype)
+    if cross:
+        c["xcache"] = {
+            "k": jax.ShapeDtypeStruct(
+                (batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jax.ShapeDtypeStruct(
+                (batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype)}
+    return c
+
+
+# ================================================================== model
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def _init_raw(self, rng):
+        cfg = self.cfg
+        dtype = DTYPES[cfg.dtype]
+        keys = jax.random.split(rng, 8)
+        cross = cfg.enc_dec
+        p = {
+            "embed": (jax.random.normal(
+                keys[0], (cfg.vocab_padded, cfg.d_model)) * 0.02
+            ).astype(dtype),
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = init_linear(keys[1], cfg.d_model, cfg.vocab_padded,
+                                    False, dtype)
+        if cfg.modality == "vlm":
+            p["patch_proj"] = init_linear(keys[2], cfg.d_model, cfg.d_model,
+                                          True, dtype)
+
+        def init_period(key):
+            ks = jax.random.split(key, cfg.period)
+            return {f"slot{i}": _init_slot(ks[i], cfg, cfg.block_pattern[i],
+                                           cfg.ffn_pattern[i], dtype,
+                                           cross=cross)
+                    for i in range(cfg.period)}
+        p["layers"] = jax.vmap(init_period)(
+            jax.random.split(keys[3], cfg.n_periods))
+
+        if cfg.enc_dec:
+            def init_enc_layer(key):
+                ks = jax.random.split(key, 2)
+                return {"ln1": init_norm(cfg.d_model, cfg.norm, dtype),
+                        "attn": init_attention(ks[0], cfg, dtype),
+                        "ln2": init_norm(cfg.d_model, cfg.norm, dtype),
+                        "ffn": init_ffn(ks[1], cfg, dtype)}
+            p["enc_layers"] = jax.vmap(init_enc_layer)(
+                jax.random.split(keys[4], cfg.n_enc_layers))
+            p["enc_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        return p
+
+    def init_params(self, rng):
+        return self._init_raw(rng)
+
+    def abstract_params(self):
+        return jax.eval_shape(self._init_raw, jax.random.key(0))
+
+    def param_specs(self):
+        """Role tree matching the param structure (see layers.py docs)."""
+        cfg = self.cfg
+        cross = cfg.enc_dec
+        s = {
+            "embed": ("tp", "fsdp"),
+            "final_norm": spec_norm(cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            s["head"] = spec_linear(False, "fsdp", "tp")
+        if cfg.modality == "vlm":
+            s["patch_proj"] = spec_linear(True, "fsdp", "tp")
+        period = {f"slot{i}": _spec_slot(cfg, cfg.block_pattern[i],
+                                         cfg.ffn_pattern[i], cross=cross)
+                  for i in range(cfg.period)}
+        s["layers"] = jax.tree.map(lambda spec: (None,) + tuple(spec),
+                                   period,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        if cfg.enc_dec:
+            enc = {"ln1": spec_norm(cfg.norm), "attn": spec_attention(cfg),
+                   "ln2": spec_norm(cfg.norm), "ffn": spec_ffn(cfg)}
+            s["enc_layers"] = jax.tree.map(
+                lambda spec: (None,) + tuple(spec), enc,
+                is_leaf=lambda x: isinstance(x, tuple))
+            s["enc_norm"] = spec_norm(cfg.norm)
+        return s
+
+    # ------------------------------------------------------------ encoder
+    def _encode(self, p, frames, ctx):
+        cfg = self.cfg
+        x = frames + sinusoidal_pos(frames.shape[1], cfg.d_model,
+                                    frames.dtype)[None]
+
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            y, _ = attention(lp["attn"], h, cfg, ctx, causal=False)
+            x = x + y
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            return x + ffn(lp["ffn"], h, cfg, ctx), None
+        body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, p["enc_layers"])
+        return apply_norm(p["enc_norm"], x, cfg.norm)
+
+    # ----------------------------------------------------------- embed in
+    def _embed_inputs(self, p, batch, ctx):
+        """-> (x (B,S,d), labels (B,S-?) handled by loss, enc_out or None)"""
+        cfg = self.cfg
+        dtype = p["embed"].dtype
+        enc = None
+        if cfg.enc_dec:
+            enc = self._encode(p, batch["frames"].astype(dtype), ctx)
+            x = jnp.take(p["embed"], batch["tokens"], axis=0)
+            x = x + sinusoidal_pos(x.shape[1], cfg.d_model, dtype)[None]
+        elif cfg.modality == "vlm":
+            pe = linear(p["patch_proj"], batch["patches"].astype(dtype))
+            te = jnp.take(p["embed"], batch["tokens"], axis=0)
+            x = jnp.concatenate([pe, te], axis=1)
+        else:
+            x = jnp.take(p["embed"], batch["tokens"], axis=0)
+        return ctx.constrain(x, "batch", None, None), enc
+
+    def _labels(self, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.modality == "vlm":
+            b = tokens.shape[0]
+            pad = jnp.full((b, cfg_patches(cfg, batch)), -1, tokens.dtype)
+            seq = jnp.concatenate([pad, tokens], axis=1)
+        else:
+            seq = tokens
+        return seq[:, 1:]
+
+    def _head_logits(self, params, x, ctx):
+        if self.cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(x.dtype)
+        else:
+            logits = linear(params["head"], x)
+        return ctx.constrain(logits, "batch", None, "tp")
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, batch, ctx=NO_CTX):
+        cfg = self.cfg
+        x, enc = self._embed_inputs(params, batch, ctx)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, lp):
+            for i in range(cfg.period):
+                x, _ = _slot_forward(
+                    lp[f"slot{i}"], x, cfg, ctx, cfg.block_pattern[i],
+                    cfg.ffn_pattern[i], causal=True, positions=positions,
+                    enc=enc)
+            return x, None
+        body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return self._head_logits(params, x, ctx)
+
+    def loss(self, params, batch, ctx=NO_CTX):
+        logits = self.forward(params, batch, ctx)
+        labels = self._labels(batch)
+        return cross_entropy(logits[:, :-1], labels, self.cfg.vocab)
+
+    # ------------------------------------------------------------ serving
+    def cache_shapes(self, batch, cache_len, enc_len=0):
+        """cache_len: callers pass min(seq, window) for rolling-ring decode
+        (long-context) or the full length for prefill+windowed-mask decode."""
+        cfg = self.cfg
+        dtype = DTYPES[cfg.dtype]
+        period = {
+            f"slot{i}": _slot_cache_shape(cfg, cfg.block_pattern[i], batch,
+                                          cache_len, dtype,
+                                          cross=cfg.enc_dec, enc_len=enc_len)
+            for i in range(cfg.period)}
+
+        def stack(sds):
+            return jax.ShapeDtypeStruct((cfg.n_periods,) + sds.shape,
+                                        sds.dtype)
+        return jax.tree.map(stack, period)
+
+    def init_cache(self, batch, cache_len, enc_len=0):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, cache_len, enc_len))
+
+    def serve_step(self, params, cache, batch, ctx=NO_CTX):
+        """One decode step.  batch: {"token": (B,1) i32, "pos": () i32,
+        + whisper: nothing extra (cross cache precomputed)}."""
+        cfg = self.cfg
+        dtype = params["embed"].dtype
+        x = jnp.take(params["embed"], batch["token"], axis=0)
+        if cfg.enc_dec:
+            x = x + sinusoidal_pos(1, cfg.d_model, dtype)[None]
+        pos = batch["pos"]
+        positions = jnp.full((1,), pos)
+
+        def body(x, scan_in):
+            lp, lc = scan_in
+            new_c = {}
+            for i in range(cfg.period):
+                x, nc = _slot_forward(
+                    lp[f"slot{i}"], x, cfg, ctx, cfg.block_pattern[i],
+                    cfg.ffn_pattern[i], positions=positions,
+                    cache=lc[f"slot{i}"], cache_pos=pos, enc=None)
+                new_c[f"slot{i}"] = nc
+            return x, new_c
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return self._head_logits(params, x, ctx), new_cache
+
+    def prefill(self, params, batch, cache_len=None, ctx=NO_CTX):
+        """Process a full prompt, returning (last-token logits, cache)."""
+        cfg = self.cfg
+        x, enc = self._embed_inputs(params, batch, ctx)
+        b, s, _ = x.shape
+        cache_len = cache_len or s
+        assert cfg.window is None or cache_len >= s, \
+            "rolling-cache prefill not supported; decode token by token"
+        cache = self.init_cache(b, cache_len,
+                                enc_len=enc.shape[1] if enc is not None
+                                else 0)
+        positions = jnp.arange(s)
+
+        def body(x, scan_in):
+            lp, lc = scan_in
+            new_c = {}
+            for i in range(cfg.period):
+                x, nc = _slot_forward(
+                    lp[f"slot{i}"], x, cfg, ctx, cfg.block_pattern[i],
+                    cfg.ffn_pattern[i], positions=positions,
+                    cache=lc[f"slot{i}"], cache_pos=0, enc=enc)
+                new_c[f"slot{i}"] = nc
+            return x, new_c
+        body = jax.checkpoint(body)
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        return self._head_logits(params, x, ctx), new_cache
+
+
+def cfg_patches(cfg, batch):
+    return batch["patches"].shape[1] if "patches" in batch else 0
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

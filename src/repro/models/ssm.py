@@ -1,0 +1,288 @@
+"""State-space and recurrent blocks: Mamba (jamba), mLSTM/sLSTM (xlstm).
+
+Training uses a chunked selective scan: an outer ``lax.scan`` over time
+chunks carries the (B, d_inner, d_state) state while an associative scan
+runs inside each chunk — the (B, chunk, d_inner, d_state) discretized tensor
+is never materialized for the full sequence (the same reason real Mamba
+fuses this into a kernel).  Decode is the O(1) recurrent update.
+
+The xLSTM cells follow arXiv:2405.04517 (exponential gating with the m
+stabilizer); projection plumbing is simplified (qkv straight from the
+residual stream) — noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, spec_linear
+
+MAMBA_CHUNK = 64
+
+
+# ====================================================================== mamba
+def init_mamba(key, cfg, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    ds, dc, dr = cfg.d_state, cfg.d_conv, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, False, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) / math.sqrt(dc)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dr + 2 * ds, False, dtype),
+        "dt_proj": init_linear(ks[3], dr, di, True, dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": init_linear(ks[4], di, d, False, dtype),
+    }
+
+
+def spec_mamba(cfg):
+    return {
+        "in_proj": spec_linear(False, "fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "x_proj": spec_linear(False, "tp", None),
+        "dt_proj": spec_linear(True, None, "tp"),
+        "A_log": ("tp", None),
+        "D": ("tp",),
+        "out_proj": spec_linear(False, "tp", "fsdp"),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x (B,S,di), w (dc,di).
+    state (B, dc-1, di) holds the previous tokens for decode."""
+    dc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+dc-1, di)
+    y = sum(xp[:, j:j + x.shape[1], :] * w[j][None, None, :]
+            for j in range(dc))
+    new_state = xp[:, -(dc - 1):, :]
+    return y + b[None, None, :], new_state
+
+
+def _ssm_chunk(h0, dA, dBx, C):
+    """Associative scan within one chunk.
+    h0 (B,di,ds); dA,dBx (B,L,di,ds); C (B,L,ds) -> (y (B,L,di), hL)."""
+    def combine(a, b):
+        a1, a2 = a
+        b1, b2 = b
+        return b1 * a1, b2 + b1 * a2
+    P, L = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    hs = P * h0[:, None] + L                            # (B,L,di,ds)
+    y = jnp.einsum("blds,bls->bld", hs, C)
+    return y, hs[:, -1]
+
+
+def mamba_forward(p, x, cfg, ctx, *, cache=None):
+    """x (B,S,d).  cache = {"h": (B,di,ds), "conv": (B,dc-1,di)} for decode
+    (S==1).  Returns (y (B,S,d), new_cache)."""
+    b, s, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = linear(p["in_proj"], x)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    x1, new_conv = _causal_conv(x1, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype), conv_state)
+    x1 = jax.nn.silu(x1)
+    proj = linear(p["x_proj"], x1)
+    dt_r, Bm, Cm = jnp.split(proj, [cfg.dt_rank, cfg.dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_r))    # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (di,ds)
+
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None, None])        # (B,S,di,ds)
+    dBx = (dtf[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+           * x1.astype(jnp.float32)[..., None])
+
+    if cache is not None:                               # decode: S == 1
+        h = cache["h"]
+        h = dA[:, 0] * h + dBx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, Cm.astype(jnp.float32)[:, 0])[:,
+                                                                      None]
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+        nchunks = max(1, s // MAMBA_CHUNK)
+        if s % MAMBA_CHUNK == 0 and nchunks > 1:
+            dA_c = dA.reshape(b, nchunks, MAMBA_CHUNK, di, ds)
+            dBx_c = dBx.reshape(b, nchunks, MAMBA_CHUNK, di, ds)
+            C_c = Cm.astype(jnp.float32).reshape(b, nchunks, MAMBA_CHUNK,
+                                                 ds)
+
+            def body(h, inp):
+                da, dbx, c = inp
+                y, hl = _ssm_chunk(h, da, dbx, c)
+                return hl, y
+            hL, ys = jax.lax.scan(
+                body, h0, (dA_c.swapaxes(0, 1), dBx_c.swapaxes(0, 1),
+                           C_c.swapaxes(0, 1)))
+            y = ys.swapaxes(0, 1).reshape(b, s, di)
+        else:
+            y, hL = _ssm_chunk(h0, dA, dBx, Cm.astype(jnp.float32))
+        new_cache = {"h": hL, "conv": new_conv}
+
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype)[None, None, :] * x1
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y), new_cache
+
+
+def mamba_cache_shape(cfg, batch, dtype):
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.d_state),
+                                  jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.d_inner),
+                                     dtype),
+    }
+
+
+# ====================================================================== mlstm
+def init_mlstm(key, cfg, dtype):
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_linear(ks[0], d, nh * hd, False, dtype),
+        "wk": init_linear(ks[1], d, nh * hd, False, dtype),
+        "wv": init_linear(ks[2], d, nh * hd, False, dtype),
+        "wi": init_linear(ks[3], d, nh, True, dtype),
+        "wf": init_linear(ks[4], d, nh, True, dtype),
+        "wo": init_linear(ks[5], d, nh * hd, True, dtype),
+        "out": init_linear(jax.random.fold_in(key, 7), nh * hd, d, False,
+                           dtype),
+    }
+
+
+def spec_mlstm(cfg):
+    return {
+        "wq": spec_linear(False, "fsdp", "tp"),
+        "wk": spec_linear(False, "fsdp", "tp"),
+        "wv": spec_linear(False, "fsdp", "tp"),
+        "wi": spec_linear(True, "fsdp", None),
+        "wf": spec_linear(True, "fsdp", None),
+        "wo": spec_linear(True, "fsdp", "tp"),
+        "out": spec_linear(False, "tp", "fsdp"),
+    }
+
+
+def _mlstm_step(state, qkvif):
+    """state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)); one time step."""
+    C, n, m = state
+    q, k, v, ig, fg = qkvif
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]                 # (B,H,1)
+    f_p = jnp.exp(fg + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None]
+                                               * k[..., None, :])
+    n = f_p * n + i_p * k
+    hn = jnp.einsum("bhij,bhj->bhi", C, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    y = hn / denom[..., None]
+    return (C, n, m_new), y
+
+
+def mlstm_forward(p, x, cfg, ctx, *, cache=None):
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(b, s, nh, hd).astype(jnp.float32)
+    k = (linear(p["wk"], x).reshape(b, s, nh, hd)
+         / math.sqrt(hd)).astype(jnp.float32)
+    v = linear(p["wv"], x).reshape(b, s, nh, hd).astype(jnp.float32)
+    ig = linear(p["wi"], x).astype(jnp.float32)          # (B,S,H)
+    fg = jax.nn.log_sigmoid(linear(p["wf"], x).astype(jnp.float32))
+    if cache is None:
+        C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.zeros((b, nh), jnp.float32)
+    else:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          ig.swapaxes(0, 1), fg.swapaxes(0, 1))
+    (Cn, nn, mn), ys = jax.lax.scan(_mlstm_step, (C0, n0, m0), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh * hd).astype(x.dtype)
+    o = jax.nn.sigmoid(linear(p["wo"], x))
+    out = linear(p["out"], y * o)
+    return out, {"C": Cn, "n": nn, "m": mn}
+
+
+def mlstm_cache_shape(cfg, batch, dtype):
+    nh, hd = cfg.n_heads, cfg.hd
+    return {"C": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32)}
+
+
+# ====================================================================== slstm
+def init_slstm(key, cfg, dtype):
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 9)
+    p = {}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = init_linear(ks[i], d, nh * hd, True, dtype)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (nh, hd, hd))
+                      / math.sqrt(hd)).astype(dtype)
+    p["out"] = init_linear(ks[8], nh * hd, d, False, dtype)
+    return p
+
+
+def spec_slstm(cfg):
+    p = {}
+    for g in ("z", "i", "f", "o"):
+        p[f"w{g}"] = spec_linear(True, "fsdp", "tp")
+        p[f"r{g}"] = ("tp", None, None)
+    p["out"] = spec_linear(False, "tp", "fsdp")
+    return p
+
+
+def _slstm_step(p, state, wx):
+    """state: (c, n, m, h) each (B,H,hd); wx: dict of gate pre-activations."""
+    c, n, m, h = state
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", h, p[f"r{g}"].astype(jnp.float32))
+    z = jnp.tanh(wx["z"] + rec("z"))
+    i_t = wx["i"] + rec("i")
+    f_t = wx["f"] + rec("f")
+    o = jax.nn.sigmoid(wx["o"] + rec("o"))
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_forward(p, x, cfg, ctx, *, cache=None):
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    wx = {g: linear(p[f"w{g}"], x).reshape(b, s, nh, hd).astype(jnp.float32)
+          for g in ("z", "i", "f", "o")}
+    if cache is None:
+        zeros = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (zeros, zeros, zeros, zeros)
+    else:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+
+    def step(st, inp):
+        return _slstm_step(p, st, {g: inp[gi]
+                                   for gi, g in enumerate("zifo")})
+    xs = tuple(wx[g].swapaxes(0, 1) for g in "zifo")
+    (c, n, m, h), ys = jax.lax.scan(step, state, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh * hd).astype(x.dtype)
+    return linear(p["out"], y), {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_cache_shape(cfg, batch, dtype):
+    nh, hd = cfg.n_heads, cfg.hd
+    sd = jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32)
+    return {"c": sd, "n": sd, "m": sd, "h": sd}

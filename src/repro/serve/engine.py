@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+Each slot holds a dense per-slot KV cache (model.serve_step); HBM paging
+policy (admission, eviction, GC) is delegated to the Scavenger
+PagedKVCacheManager, which accounts pages for every slot's cache growth.
+Greedy sampling; CPU-runnable with smoke configs (examples/serve_llm.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .paged_cache import PagedKVCacheManager
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    hot: bool = True        # False for long-lived shared-prefix requests
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_slots: int = 4,
+                 cache_len: int = 256, page_size: int = 16,
+                 hbm_pages: int | None = None):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.slots = batch_slots
+        self.cache_len = cache_len
+        self.page_size = page_size
+        n_pages = hbm_pages or (batch_slots * cache_len // page_size * 2)
+        per_layer_pages = max(1, cache_len // page_size)
+        self.pager = PagedKVCacheManager(
+            n_pages, page_size, extent_pages=max(4, per_layer_pages // 2))
+        self.cache = model.init_cache(batch_slots, cache_len)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int64)
+        self.queue: list[Request] = []
+        self.steps = 0
+        self._step_fn = jax.jit(model.serve_step)
+
+    # ----------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.slot_req[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = (len(req.prompt) + req.max_new
+                    + self.page_size - 1) // self.page_size
+            if not self.pager.admit(req.rid, need, hot=req.hot):
+                break                      # HBM full: wait for GC headroom
+            self.queue.pop(0)
+            self.slot_req[i] = req
+            self.slot_pos[i] = 0
+            # prefill token-by-token (keeps a single compiled step)
+            for t in req.prompt[:-1]:
+                self._single(i, t)
+            self._pending_first = (i, req.prompt[-1])
+            self._single(i, req.prompt[-1], sample=True)
+
+    def _single(self, slot: int, token: int, sample: bool = False) -> None:
+        b = np.zeros((self.slots, 1), np.int32)
+        b[slot, 0] = token
+        logits, self.cache = self._step_fn(
+            self.params, self.cache,
+            {"token": jnp.asarray(b), "pos": jnp.int32(self.slot_pos[slot])})
+        self.slot_pos[slot] += 1
+        if sample:
+            req = self.slot_req[slot]
+            nxt = int(jnp.argmax(logits[slot, 0, :self.cfg.vocab]))
+            req.out.append(nxt)
+
+    def step(self) -> None:
+        """One decode step across all occupied slots."""
+        self._admit()
+        occupied = [i for i in range(self.slots)
+                    if self.slot_req[i] is not None]
+        if not occupied:
+            return
+        tok = np.zeros((self.slots, 1), np.int32)
+        # NOTE: slots decode at their own positions; for simplicity (and
+        # because smoke models are tiny) we step slots with equal pos
+        # together and others individually.
+        for i in occupied:
+            req = self.slot_req[i]
+            last = req.out[-1] if req.out else req.prompt[-1]
+            self._single(i, last, sample=True)
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.pager.finish(req.rid)
+                self.slot_req[i] = None
+        self.steps += 1
+
+    def run(self, max_steps: int = 1000) -> None:
+        while (self.queue or any(self.slot_req)) and max_steps > 0:
+            self.step()
+            max_steps -= 1
+
+    def stats(self) -> dict:
+        s = self.pager.stats()
+        s["steps"] = self.steps
+        return s

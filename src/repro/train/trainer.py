@@ -1,0 +1,137 @@
+"""Trainer: AdamW with FSDP-friendly state, gradient accumulation, global
+norm clipping, dtype-configurable moments (bf16 moments for the >=100B MoE
+configs so optimizer state fits v5e HBM — noted in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NO_CTX
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    accum_steps: int = 1
+    moment_dtype: str = "float32"        # bfloat16 for >=100B configs
+    warmup_steps: int = 20
+
+
+def init_opt_state(params, tcfg: TrainConfig):
+    mdt = jnp.dtype(tcfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(abstract_params, tcfg: TrainConfig):
+    mdt = jnp.dtype(tcfg.moment_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, mdt)
+    return {"m": jax.tree.map(sds, abstract_params),
+            "v": jax.tree.map(sds, abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_shardings(param_shardings, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {"m": param_shardings, "v": param_shardings,
+            "step": NamedSharding(mesh, P())}
+
+
+def _schedule(tcfg, step):
+    warm = jnp.minimum(step / max(tcfg.warmup_steps, 1), 1.0)
+    return tcfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, tcfg: TrainConfig):
+    step = opt_state["step"] + 1
+    lr = _schedule(tcfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / (gn + 1e-9))
+    mdt = jnp.dtype(tcfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = tcfg.b1 * m.astype(jnp.float32) + (1 - tcfg.b1) * g
+        v32 = tcfg.b2 * v.astype(jnp.float32) + (1 - tcfg.b2) * g * g
+        mhat = m32 / (1 - tcfg.b1 ** step)
+        vhat = v32 / (1 - tcfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + tcfg.eps) \
+            + tcfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gn
+
+
+def make_train_step(model, tcfg: TrainConfig, ctx=NO_CTX,
+                    grad_shardings=None):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Gradient accumulation: the global batch is split into
+    ``accum_steps`` microbatches scanned sequentially (bounds activation
+    memory for the >=100B configs).
+
+    grad_shardings (§Perf): constraining per-microbatch gradients and the
+    accumulator to the parameter shardings lets XLA keep gradients in their
+    FSDP-sharded form (reduce-scatter) instead of all-reducing full
+    replicas."""
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, ctx)
+
+    def train_step(params, opt_state, batch):
+        a = tcfg.accum_steps
+        if a > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree.map(jnp.add, grad_acc,
+                                        constrain(grads))
+                return (loss_acc + loss, constrain(grad_acc)), None
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros),
+                                            micro)
+            loss = loss / a
+            grads = jax.tree.map(lambda g: g / a, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain(grads)
+        params, opt_state, gn = adamw_update(params, grads, opt_state, tcfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+    return train_step

@@ -1,0 +1,70 @@
+"""YCSB core workloads A-F (paper §IV-C), scaled.
+
+  A: 50% read / 50% update        B: 95% read / 5% update
+  C: 100% read                    D: 95% read-latest / 5% insert
+  E: 95% scan / 5% insert         F: 50% read / 50% read-modify-write
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .generator import Runner, WorkloadSpec
+
+YCSB_MIX = {
+    "A": dict(read=0.5, update=0.5),
+    "B": dict(read=0.95, update=0.05),
+    "C": dict(read=1.0),
+    "D": dict(read_latest=0.95, insert=0.05),
+    "E": dict(scan=0.95, insert=0.05),
+    "F": dict(read=0.5, rmw=0.5),
+}
+
+
+def run_ycsb(store, spec: WorkloadSpec, workload: str, n_ops: int,
+             runner: Runner | None = None) -> dict:
+    """Run one YCSB workload; assumes the store is already loaded+updated
+    (paper: 100GB load + 300GB updates before each YCSB run)."""
+    mix = YCSB_MIX[workload.upper()]
+    r = runner or Runner(store, spec)
+    rng = r.rng
+    t0 = store.io.clock_us
+    kinds = list(mix.keys())
+    probs = np.array([mix[k] for k in kinds])
+    choice = rng.choice(len(kinds), size=n_ops, p=probs / probs.sum())
+    next_key = spec.n_keys
+    recent: list[int] = []
+    errors = 0
+    for c in choice.tolist():
+        kind = kinds[c]
+        if kind in ("read", "rmw"):
+            k = int(r.keys.sample(rng, 1)[0])
+            got = store.get(k)
+            if got != r.oracle.get(k):
+                errors += 1
+            if kind == "rmw":
+                vs = int(spec.value_dist.sample(rng, 1)[0])
+                r.oracle[k] = store.put(k, vs)
+        elif kind == "update":
+            k = int(r.keys.sample(rng, 1)[0])
+            vs = int(spec.value_dist.sample(rng, 1)[0])
+            r.oracle[k] = store.put(k, vs)
+        elif kind == "insert":
+            vs = int(spec.value_dist.sample(rng, 1)[0])
+            r.oracle[next_key] = store.put(next_key, vs)
+            recent.append(next_key)
+            next_key += 1
+        elif kind == "read_latest":
+            pool = recent[-100:] if recent else [0]
+            k = int(pool[int(rng.integers(0, len(pool)))])
+            got = store.get(k)
+            if got != r.oracle.get(k):
+                errors += 1
+        elif kind == "scan":
+            s = int(rng.integers(0, spec.n_keys))
+            ln = int(rng.integers(1, 101))
+            store.scan(s, ln)
+    assert errors == 0, f"{errors} YCSB read mismatches"
+    sim_s = (store.io.clock_us - t0) / 1e6
+    return {"workload": workload, "ops": n_ops, "sim_s": sim_s,
+            "kops_per_s": n_ops / sim_s / 1e3 if sim_s else float("inf")}

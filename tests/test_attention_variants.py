@@ -1,0 +1,84 @@
+"""§Perf attention variants must match the naive oracle exactly."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.layers import CHUNK_KV
+from repro.models.model import build_model
+
+
+def _variants(cfg):
+    return {
+        "grouped": dataclasses.replace(cfg, gqa_grouped=True),
+        "chunked": dataclasses.replace(cfg, attn_impl="chunked"),
+    }
+
+
+@pytest.mark.parametrize("arch", ["smollm_360m", "qwen2_05b",
+                                  "llava_next_mistral_7b"])
+def test_forward_equivalence(arch):
+    base_cfg = dataclasses.replace(
+        get_config(arch, smoke=True), dtype="float32")
+    model = build_model(base_cfg)
+    params = model.init_params(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    seq = 2 * CHUNK_KV + 64 if arch != "llava_next_mistral_7b" else 128
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, base_cfg.vocab, (1, seq)), jnp.int32)}
+    if base_cfg.modality == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((1, 8, base_cfg.d_model)), jnp.float32)
+    ref = np.asarray(jax.jit(model.forward)(params, batch), np.float32)
+    for name, cfg in _variants(base_cfg).items():
+        m2 = build_model(cfg)
+        got = np.asarray(jax.jit(m2.forward)(params, batch), np.float32)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{arch}/{name}")
+
+
+def test_chunked_window_attention_matches():
+    cfg = dataclasses.replace(get_config("llava_next_mistral_7b",
+                                         smoke=True),
+                              dtype="float32", window=64)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    seq = 2 * CHUNK_KV + 32
+    batch = {"patches": jnp.asarray(
+                 rng.standard_normal((1, 4, cfg.d_model)), jnp.float32),
+             "tokens": jnp.asarray(
+                 rng.integers(0, cfg.vocab, (1, seq)), jnp.int32)}
+    ref = np.asarray(build_model(dataclasses.replace(
+        cfg, attn_impl="naive")).forward(params, batch), np.float32)
+    got = np.asarray(build_model(dataclasses.replace(
+        cfg, attn_impl="chunked")).forward(params, batch), np.float32)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_decode_matches():
+    cfg = dataclasses.replace(get_config("qwen2_05b", smoke=True),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(2))
+    b, cache_len = 1, 4 * CHUNK_KV
+    tok = jnp.ones((b, 1), jnp.int32)
+    outs = {}
+    for name, c2 in [("naive", cfg),
+                     ("chunked", dataclasses.replace(
+                         cfg, attn_impl="chunked")),
+                     ("grouped", dataclasses.replace(
+                         cfg, gqa_grouped=True))]:
+        m2 = build_model(c2)
+        cache = m2.init_cache(b, cache_len)
+        logits, _ = jax.jit(m2.serve_step)(
+            params, cache, {"token": tok, "pos": jnp.int32(0)})
+        outs[name] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["chunked"], outs["naive"],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs["grouped"], outs["naive"],
+                               rtol=2e-4, atol=2e-4)

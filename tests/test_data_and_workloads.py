@@ -1,0 +1,73 @@
+"""Data pipeline determinism/elasticity + workload generator stats."""
+
+import numpy as np
+import pytest
+
+from repro.data import PipelineConfig, TokenPipeline
+from repro.workloads import Mixed, Pareto, ZipfKeys, mixed_8k, pareto_1k
+
+
+def test_pipeline_deterministic_and_skippable():
+    cfg = PipelineConfig(vocab=1000, seq_len=32, global_batch=8, seed=7)
+    p1 = TokenPipeline(cfg)
+    batches = [next(p1)["tokens"] for _ in range(5)]
+    # O(1) random access reproduces the stream
+    p2 = TokenPipeline(cfg)
+    np.testing.assert_array_equal(p2.batch_at(3)["tokens"], batches[3])
+    # resume from checkpointed state
+    p3 = TokenPipeline(cfg)
+    p3.restore({"step": 4})
+    np.testing.assert_array_equal(next(p3)["tokens"], batches[4])
+
+
+def test_pipeline_host_sharding_disjoint():
+    full = TokenPipeline(PipelineConfig(1000, 16, 8, seed=1))
+    h0 = TokenPipeline(PipelineConfig(1000, 16, 8, seed=1, host_id=0,
+                                      n_hosts=2))
+    h1 = TokenPipeline(PipelineConfig(1000, 16, 8, seed=1, host_id=1,
+                                      n_hosts=2))
+    b0, b1 = next(h0)["tokens"], next(h1)["tokens"]
+    assert b0.shape == (4, 16) and b1.shape == (4, 16)
+    assert not np.array_equal(b0, b1)
+
+
+def test_pipeline_tokens_in_vocab():
+    p = TokenPipeline(PipelineConfig(vocab=97, seq_len=64, global_batch=4))
+    for _ in range(3):
+        t = next(p)["tokens"]
+        assert t.min() >= 0 and t.max() < 97
+
+
+def test_mixed_distribution_mean():
+    rng = np.random.default_rng(0)
+    d = Mixed()
+    s = d.sample(rng, 20000)
+    assert abs(s.mean() - d.mean) / d.mean < 0.05
+    assert set(np.unique(s[s > 1000])) == {16384}
+
+
+def test_pareto_distribution_mean():
+    rng = np.random.default_rng(0)
+    d = Pareto(mean_size=1024)
+    s = d.sample(rng, 50000)
+    assert 800 < s.mean() < 1300
+    assert s.min() >= 64
+
+
+def test_zipf_keys_skewed_and_in_range():
+    z = ZipfKeys(10000, theta=0.99, seed=0)
+    rng = np.random.default_rng(0)
+    ks = z.sample(rng, 20000)
+    assert ks.min() >= 0 and ks.max() < 10000
+    # top-1% of keys should receive a large share of accesses
+    _, counts = np.unique(ks, return_counts=True)
+    counts.sort()
+    top_share = counts[-100:].sum() / counts.sum()
+    assert top_share > 0.15
+
+
+def test_workload_specs():
+    spec = mixed_8k(dataset_bytes=16 << 20)
+    assert spec.n_keys > 0 and spec.n_updates == 3 * spec.n_keys
+    spec2 = pareto_1k(dataset_bytes=8 << 20)
+    assert spec2.n_keys > spec.n_keys     # smaller values -> more keys

@@ -1,0 +1,186 @@
+"""Unit tests for the storage-engine substrate."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (BloomFilter, BlockCache, DropCache,
+                               EngineConfig, Memtable, SSTable, build_vsst,
+                               splitmix64, hash_family)
+from repro.core.engine.tables import (ETYPE_INLINE, ETYPE_REF, ETYPE_TOMB,
+                                      _block_layout)
+
+
+# --------------------------------------------------------------------- keys
+def test_splitmix64_deterministic_and_spread():
+    x = np.arange(1000, dtype=np.uint64)
+    h1 = splitmix64(x)
+    h2 = splitmix64(x)
+    assert np.array_equal(h1, h2)
+    assert len(np.unique(h1)) == 1000          # no collisions on tiny input
+    # bits look balanced
+    ones = sum(bin(int(v)).count("1") for v in h1) / (1000 * 64)
+    assert 0.45 < ones < 0.55
+
+
+def test_hash_family_shape_and_independence():
+    keys = np.arange(64, dtype=np.uint64)
+    hs = hash_family(keys, 5)
+    assert hs.shape == (5, 64)
+    assert not np.array_equal(hs[0], hs[1])
+
+
+def test_bloom_no_false_negatives():
+    keys = np.sort(np.unique(
+        np.random.default_rng(0).integers(0, 1 << 60, 5000).astype(np.uint64)))
+    bf = BloomFilter(keys, bits_per_key=10)
+    assert bf.may_contain(keys).all()
+
+
+def test_bloom_false_positive_rate_reasonable():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 1 << 60, 4096).astype(np.uint64)
+    bf = BloomFilter(np.sort(np.unique(keys)), bits_per_key=10)
+    probes = rng.integers(1 << 61, 1 << 62, 10000).astype(np.uint64)
+    fp = bf.may_contain(probes).mean()
+    assert fp < 0.05          # ~1% expected at 10 bits/key
+
+
+def test_bloom_empty():
+    bf = BloomFilter(np.array([], np.uint64))
+    assert not bf.may_contain(np.array([1, 2, 3], np.uint64)).any()
+
+
+# -------------------------------------------------------------------- cache
+def test_block_cache_two_priority_eviction():
+    c = BlockCache(100, high_pri_frac=0.5)
+    c.put(("f", 1), 40, BlockCache.PRI_HIGH)
+    c.put(("f", 2), 40, BlockCache.PRI_LOW)
+    c.put(("f", 3), 40, BlockCache.PRI_LOW)    # evicts low-pri first
+    assert c.get(("f", 1))                      # high-pri survived
+    assert not c.get(("f", 2))
+    assert c.get(("f", 3))
+
+
+def test_block_cache_erase_file():
+    c = BlockCache(1000)
+    c.put((1, "d", 0), 10)
+    c.put((1, "d", 1), 10, BlockCache.PRI_HIGH)
+    c.put((2, "d", 0), 10)
+    c.erase_file(1)
+    assert not c.get((1, "d", 0)) and not c.get((1, "d", 1))
+    assert c.get((2, "d", 0))
+
+
+def test_block_cache_oversized_item_ignored():
+    c = BlockCache(100)
+    c.put(("big",), 1000)
+    assert c.used == 0
+
+
+def test_dropcache_lru_and_hotness():
+    d = DropCache(capacity_keys=3)
+    d.record(np.array([1, 2, 3], np.uint64))
+    d.record(np.array([4], np.uint64))          # evicts 1
+    hot = d.is_hot(np.array([1, 2, 3, 4], np.uint64))
+    assert list(hot) == [False, True, True, True]
+    assert d.nbytes == 3 * DropCache.BYTES_PER_KEY
+
+
+# ----------------------------------------------------------------- memtable
+def test_memtable_overwrite_and_bytes():
+    cfg = EngineConfig(engine="scavenger", memtable_bytes=1 << 20)
+    mt = Memtable(cfg)
+    mt.put(5, 1, 100, 1000)
+    b1 = mt.bytes
+    mt.put(5, 2, 101, 2000)                    # overwrite: bytes adjust
+    assert mt.bytes == b1 + 1000
+    assert mt.get(5)[2] == 101
+    mt.delete(5, 3)
+    assert mt.get(5)[1] == ETYPE_TOMB
+    keys, seqs, ety, vids, vsz, vf = mt.sorted_arrays()
+    assert len(keys) == 1 and ety[0] == ETYPE_TOMB
+
+
+def test_memtable_sorted_arrays_order():
+    cfg = EngineConfig(engine="rocksdb")
+    mt = Memtable(cfg)
+    for k in [9, 3, 7, 1]:
+        mt.put(k, k, k, 10)
+    keys, *_ = mt.sorted_arrays()
+    assert list(keys) == [1, 3, 7, 9]
+
+
+# ------------------------------------------------------------------- tables
+def _mk_table(cfg, n=100, layout=None, kind="k"):
+    keys = np.arange(0, 2 * n, 2, dtype=np.uint64)
+    seqs = np.arange(n, dtype=np.uint64)
+    ety = np.where(np.arange(n) % 3 == 0, ETYPE_REF,
+                   ETYPE_INLINE).astype(np.uint8)
+    vids = np.arange(n, dtype=np.uint64) + 1000
+    vsz = np.full(n, 600, np.int64)
+    vf = np.where(ety == ETYPE_REF, 7, -1).astype(np.int64)
+    return SSTable(cfg, kind, layout or cfg.ksst_layout, keys, seqs, ety,
+                   vids, vsz, vf)
+
+
+def test_block_layout_assignment():
+    rec = np.full(10, 1000, np.int64)
+    bo, nb, bb = _block_layout(rec, 4096)
+    assert nb == 3
+    assert bb.sum() == 10_000
+    assert bo[0] == 0 and bo[-1] == 2
+
+
+def test_btable_find_and_ranges():
+    cfg = EngineConfig(engine="terarkdb")
+    t = _mk_table(cfg, 100)
+    pos = t.find(np.array([0, 2, 3, 198], np.uint64))
+    assert list(pos) == [0, 1, -1, 99]
+    assert t.min_key == 0 and t.max_key == 198
+    r = t.positions_in_range(10, 20)
+    assert list(t.keys[r]) == [10, 12, 14, 16, 18, 20]
+
+
+def test_dtable_separates_streams():
+    cfg = EngineConfig(engine="scavenger")
+    t = _mk_table(cfg, 99)
+    assert t.layout == "dtable"
+    assert t.n_kf_blocks >= 1 and t.n_kv_blocks >= 1
+    # KF records are small: far more refs per block than inline records
+    kf_per_block = t.kf_mask.sum() / t.n_kf_blocks
+    kv_per_block = (~t.kf_mask).sum() / t.n_kv_blocks
+    assert kf_per_block > kv_per_block
+
+
+def test_rtable_dense_index_bigger_than_sparse():
+    cfg_r = EngineConfig(engine="scavenger")
+    cfg_b = EngineConfig(engine="terarkdb")
+    n = 500
+    keys = np.arange(n, dtype=np.uint64)
+    vids = keys + 1
+    vsz = np.full(n, 1024, np.int64)
+    rt = build_vsst(cfg_r, keys, keys, vids, vsz)
+    bt = build_vsst(cfg_b, keys, keys, vids, vsz)
+    assert rt.layout == "rtable" and bt.layout == "btable"
+    assert rt.index_bytes > bt.index_bytes          # dense index overhead...
+    overhead = (rt.file_bytes - bt.file_bytes) / bt.file_bytes
+    assert overhead < 0.05                          # ...but <5% (Table I)
+    assert rt.n_index_blocks >= 1
+
+
+def test_table_rejects_unsorted_keys():
+    cfg = EngineConfig(engine="rocksdb")
+    with pytest.raises(AssertionError):
+        SSTable(cfg, "k", "btable",
+                np.array([5, 3], np.uint64), np.zeros(2, np.uint64),
+                np.zeros(2, np.uint8), np.zeros(2, np.uint64),
+                np.zeros(2, np.int64), np.zeros(2, np.int64))
+
+
+def test_vsst_garbage_ratio():
+    cfg = EngineConfig(engine="terarkdb")
+    keys = np.arange(10, dtype=np.uint64)
+    t = build_vsst(cfg, keys, keys, keys + 1, np.full(10, 1000, np.int64))
+    assert t.garbage_ratio() == 0.0
+    t.garbage_bytes = t.total_value_bytes // 2
+    assert abs(t.garbage_ratio() - 0.5) < 1e-9
