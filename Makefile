@@ -1,0 +1,12 @@
+PY := python
+export PYTHONPATH := src
+
+.PHONY: check test bench-smoke
+
+check: test bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api fig02_tradeoff

@@ -1,0 +1,96 @@
+"""Batched vs scalar Store API microbenchmark.
+
+Acceptance row for the batched columnar API: ``multi_get`` at batch size
+256 must be >= 3x lower simulated us/op than the scalar ``get`` loop on the
+quick scale (the batch issues at NVMe queue depth ``fg_qd_max`` instead of
+queue depth 1, and coalesces vSST record fetches into runs).  ``wall_us``
+carries the Python-side per-op cost — the interpreter-overhead win that
+motivated the batch API in the first place.
+
+Scalar and batched sides run on independently built but identically seeded
+stores, so cache and LSM state are byte-identical at measurement start.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import WriteBatch
+from repro.workloads import pareto_1k
+
+from .common import build, ds_bytes, row
+
+BATCH = 256
+
+
+def _loaded(engine="scavenger"):
+    spec = pareto_1k(dataset_bytes=ds_bytes(8))
+    store, r = build(engine, spec)
+    r.load()
+    r.update(spec.n_keys)
+    store.drain()
+    return store, r, spec
+
+
+def run(scale=None):
+    rows = []
+
+    # ------------------------------------------------------------- reads
+    store_s, r_s, spec = _loaded()
+    keys = r_s.keys.sample(np.random.default_rng(123), BATCH)
+    t0, w0 = store_s.io.fg_clock_us, time.perf_counter()
+    for k in keys.tolist():
+        store_s.get(int(k))
+    us_scalar = (store_s.io.fg_clock_us - t0) / BATCH
+    wall_scalar = (time.perf_counter() - w0) / BATCH * 1e6
+
+    store_b, _, _ = _loaded()
+    t0, w0 = store_b.io.fg_clock_us, time.perf_counter()
+    store_b.multi_get(keys.astype(np.uint64))
+    us_batch = (store_b.io.fg_clock_us - t0) / BATCH
+    wall_batch = (time.perf_counter() - w0) / BATCH * 1e6
+
+    rows.append(row("batch/scalar_get", us_scalar, wall_us=wall_scalar))
+    rows.append(row(f"batch/multi_get_{BATCH}", us_batch,
+                    wall_us=wall_batch,
+                    speedup=us_scalar / max(us_batch, 1e-9)))
+
+    # ------------------------------------------------------------ writes
+    store_s, r_s, spec = _loaded()
+    rng = np.random.default_rng(7)
+    wkeys = r_s.keys.sample(rng, BATCH)
+    wsz = spec.value_dist.sample(rng, BATCH)
+    t0, w0 = store_s.io.fg_clock_us, time.perf_counter()
+    for k, v in zip(wkeys.tolist(), wsz.tolist()):
+        store_s.put(int(k), int(v))
+    us_scalar_w = (store_s.io.fg_clock_us - t0) / BATCH
+    wall_scalar_w = (time.perf_counter() - w0) / BATCH * 1e6
+
+    store_b, _, _ = _loaded()
+    t0, w0 = store_b.io.fg_clock_us, time.perf_counter()
+    store_b.write(WriteBatch().puts(wkeys.astype(np.uint64),
+                                    wsz.astype(np.int64)))
+    us_batch_w = (store_b.io.fg_clock_us - t0) / BATCH
+    wall_batch_w = (time.perf_counter() - w0) / BATCH * 1e6
+
+    rows.append(row("batch/scalar_put", us_scalar_w, wall_us=wall_scalar_w))
+    rows.append(row(f"batch/writebatch_{BATCH}", us_batch_w,
+                    wall_us=wall_batch_w,
+                    speedup=us_scalar_w / max(us_batch_w, 1e-9)))
+
+    # ------------------------------------------------------------- scans
+    store_s, _, spec = _loaded()
+    starts = np.random.default_rng(5).integers(0, spec.n_keys, 64)
+    t0 = store_s.io.fg_clock_us
+    for s in starts.tolist():
+        store_s.scan(int(s), 20)
+    us_scalar_sc = (store_s.io.fg_clock_us - t0) / 64
+
+    store_b, _, _ = _loaded()
+    t0 = store_b.io.fg_clock_us
+    store_b.multi_scan(starts, 20)
+    us_batch_sc = (store_b.io.fg_clock_us - t0) / 64
+    rows.append(row("batch/scalar_scan", us_scalar_sc))
+    rows.append(row("batch/multi_scan_64", us_batch_sc,
+                    speedup=us_scalar_sc / max(us_batch_sc, 1e-9)))
+    return rows

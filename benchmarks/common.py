@@ -26,6 +26,12 @@ def scale_name() -> str:
     return os.environ.get("REPRO_BENCH_SCALE", "quick")
 
 
+def batch_size() -> int:
+    """Client batch size for the columnar Store API (REPRO_BATCH=1 for the
+    scalar op-at-a-time baseline)."""
+    return int(os.environ.get("REPRO_BATCH", "256"))
+
+
 def ds_bytes(quick_mb: int) -> int:
     mult = 4 if scale_name() == "full" else 1
     return quick_mb * mult << 20
@@ -35,9 +41,10 @@ def build(engine: str, spec: WorkloadSpec, quota_x: float | None = None,
           **overrides) -> tuple[Store, Runner]:
     quota = int(quota_x * spec.dataset_bytes) if quota_x else None
     cfg = EngineConfig.scaled(engine, spec.dataset_bytes,
+                              est_keys=spec.n_keys,
                               space_quota_bytes=quota, **overrides)
     store = Store(cfg)
-    return store, Runner(store, spec)
+    return store, Runner(store, spec, batch=batch_size())
 
 
 def load_update(engine: str, spec: WorkloadSpec,

@@ -4,7 +4,8 @@ Five selectable engines over one deterministic substrate:
 rocksdb | blobdb | titan | terarkdb | scavenger.
 """
 
+from .batch import WriteBatch
 from .engine.config import EngineConfig, ENGINES
 from .store import Store
 
-__all__ = ["EngineConfig", "ENGINES", "Store"]
+__all__ = ["EngineConfig", "ENGINES", "Store", "WriteBatch"]

@@ -128,15 +128,25 @@ class EngineConfig:
     # ---------------------------------------------------------------- scaled
     @classmethod
     def scaled(cls, engine: str, dataset_bytes: int,
-               scale_ref_gb: float = 100.0, **overrides) -> "EngineConfig":
+               scale_ref_gb: float = 100.0, est_keys: int | None = None,
+               **overrides) -> "EngineConfig":
         """Shrink the paper's 100GB configuration to ``dataset_bytes``.
 
         Ratios held: memtable=kSST=dataset/1600, vSST=4x kSST,
         base level = dataset/400, cache = 1% of dataset.  Block size and
-        record formats stay at their real values.
+        record formats stay at their real values.  Pass ``est_keys`` (the
+        workload's key count) when known; it defaults to a 1KB-value
+        estimate.
         """
         scale = dataset_bytes / (scale_ref_gb * (1 << 30))
         mt = max(32 << 10, int((64 << 20) * scale))
+        # DropCache: 2% of a 4KB-page keyspace, floored at 512 — but
+        # clamped to a quarter of the keyspace (tiny CI datasets hold fewer
+        # keys than the floor; a DropCache covering every key would mark
+        # all writes hot and disable the hot/cold split)
+        if est_keys is None:
+            est_keys = dataset_bytes // 1024
+        est_keys = max(64, est_keys)
         cfg = dict(
             engine=engine,
             memtable_bytes=mt,
@@ -144,7 +154,8 @@ class EngineConfig:
             vsst_bytes=4 * mt,
             base_level_bytes=max(2 * mt, int((256 << 20) * scale)),
             cache_bytes=max(64 << 10, int(dataset_bytes * 0.01)),
-            dropcache_keys=max(512, int(dataset_bytes / 4096 * 0.02)),
+            dropcache_keys=min(max(512, int(dataset_bytes / 4096 * 0.02)),
+                               max(16, est_keys // 4)),
         )
         cfg.update(overrides)
         return cls(**cfg)

@@ -14,6 +14,7 @@ figures (GC latency breakdown Fig.3, I/O reduction Fig.12(c)).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import defaultdict
 
@@ -48,6 +49,9 @@ class DeviceModel:
     read_gbps: float = 2.5             # sequential read bandwidth
     write_gbps: float = 1.2            # sequential write bandwidth
     cache_hit_us: float = 0.2          # CPU cost of a block-cache hit
+    fg_qd_max: float = 16.0            # NVMe queue depth a batched user op
+    #                                    can sustain (matches the bg pool's
+    #                                    16 threads saturating one SSD)
     lane_parallelism: dict = dataclasses.field(
         default_factory=lambda: {"fg": 1.0, "bg": 8.0, "gc": 2.0})
 
@@ -105,6 +109,24 @@ class SimIO:
         self.time_us[cat] += t
         self.lanes[self.lane] += t
         return t
+
+    @contextlib.contextmanager
+    def batched(self, depth: int):
+        """Issue foreground I/O at queue depth ``depth`` (capped).
+
+        A multi-key user call (multi_get / multi_scan) submits its reads
+        together, so the per-op latency floor amortizes across the batch —
+        the same parallelism model the bg/gc lanes already use.  Sequential
+        bandwidth is NOT multiplied (one set of flash channels); only the
+        per-op overhead divides.  Nested contexts keep the deepest queue.
+        """
+        par = self.device.lane_parallelism
+        prev = par.get("fg", 1.0)
+        par["fg"] = max(prev, min(float(depth), self.device.fg_qd_max))
+        try:
+            yield
+        finally:
+            par["fg"] = prev
 
     # ------------------------------------------------------------------ I/O
     def rand_read(self, nbytes: int, cat: str) -> float:

@@ -47,6 +47,47 @@ class Memtable:
     def get(self, key: int):
         return self.entries.get(key)
 
+    def entry_bytes_batch(self, ety: np.ndarray, vsizes: np.ndarray
+                          ) -> np.ndarray:
+        """Vectorized serialized-size computation for a record column."""
+        return np.where(
+            ety == ETYPE_TOMB, self.cfg.tomb_rec_bytes(),
+            np.where(ety == ETYPE_REF, self.cfg.ref_rec_bytes(),
+                     self.cfg.inline_rec_bytes(vsizes))).astype(np.int64)
+
+    def put_batch(self, keys: np.ndarray, seqs: np.ndarray, ety: np.ndarray,
+                  vids: np.ndarray, vsizes: np.ndarray, vfiles: np.ndarray,
+                  entry_bytes: np.ndarray | None = None) -> int:
+        """Insert a record column until the memtable fills.
+
+        Returns how many records were consumed (always >= 1 on non-empty
+        input); the caller rotates the memtable and re-submits the rest.
+        Stops exactly where the scalar path would have rotated, so batch
+        and scalar runs produce identical flush boundaries.
+        """
+        n = len(keys)
+        if n == 0:
+            return 0
+        if entry_bytes is None:
+            entry_bytes = self.entry_bytes_batch(ety, vsizes)
+        cap = self.cfg.memtable_bytes
+        entries = self.entries
+        consumed = 0
+        for k, rec, nbytes in zip(
+                keys.tolist(),
+                zip(seqs.tolist(), ety.tolist(), vids.tolist(),
+                    vsizes.tolist(), vfiles.tolist()),
+                entry_bytes.tolist()):
+            prev = entries.get(k)
+            if prev is not None:
+                self.bytes -= self._entry_bytes(prev[1], prev[3])
+            entries[k] = rec
+            self.bytes += nbytes
+            consumed += 1
+            if self.bytes >= cap:
+                break
+        return consumed
+
     @property
     def full(self) -> bool:
         return self.bytes >= self.cfg.memtable_bytes

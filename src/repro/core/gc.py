@@ -156,11 +156,8 @@ def run_gc(store, candidates: list[SSTable]) -> None:
                 store.version.retire_value_file(t.fid, None)
                 store.chains[t.fid] = group
                 store.cache.erase_file(t.fid)
-        else:  # titan writeback
-            for k, vid, vsz, nf in zip(vkeys.tolist(), vvids.tolist(),
-                                       vvsz.tolist(),
-                                       new_fid_per_rec.tolist()):
-                store.writeback_index(int(k), int(vid), int(vsz), int(nf))
+        else:  # titan writeback: index rewrites as one batched write
+            store.writeback_index_batch(vkeys, vvids, vvsz, new_fid_per_rec)
             for t in candidates:
                 store.version.retire_value_file(t.fid, None)
                 store.cache.erase_file(t.fid)

@@ -22,6 +22,7 @@ import numpy as np
 
 from . import compaction as comp
 from . import gc as gcmod
+from .batch import OP_DELETE, OP_PUT, WriteBatch
 from .engine import io as sio
 from .engine.cache import BlockCache, DropCache
 from .engine.config import EngineConfig
@@ -48,6 +49,7 @@ class Store:
         self.seq = 0
         self.next_vid = 1
         self.in_gc = False
+        self.in_batch_write = False
         self.compact_cursor: dict[int, int] = {}
         self._last_bg = "gc"
 
@@ -62,58 +64,147 @@ class Store:
         self.stall_us = 0.0
 
     # ================================================================== API
+    # The public API is batched and columnar (write / multi_get /
+    # multi_scan); the scalar methods below are thin one-record shims.
     def put(self, key: int, vsize: int) -> int:
         """Write key with a value of ``vsize`` bytes; returns the vid."""
-        self._write_pressure()
-        self.seq += 1
-        vid = self.next_vid
-        self.next_vid += 1
-        rec = self.cfg.key_bytes + vsize + 12
-        self.io.seq_write(rec, sio.CAT_WAL)
-        self.user_write_bytes += rec
-        self.n_user_ops += 1
-        self.memtable.put(key, self.seq, vid, vsize)
-        prev = self.latest.get(key)
-        if prev is not None:
-            self.valid_bytes -= prev[1]
-        self.latest[key] = (vid, vsize)
-        self.valid_bytes += vsize
-        self._after_write(rec)
-        return vid
+        vids = self._write_arrays(np.array([OP_PUT], np.uint8),
+                                  np.array([key], np.uint64),
+                                  np.array([vsize], np.int64))
+        return int(vids[0])
 
     def delete(self, key: int) -> None:
-        self._write_pressure()
-        self.seq += 1
-        rec = self.cfg.key_bytes + 12
-        self.io.seq_write(rec, sio.CAT_WAL)
-        self.user_write_bytes += rec
-        self.n_user_ops += 1
-        self.memtable.delete(key, self.seq)
-        prev = self.latest.pop(key, None)
-        if prev is not None:
-            self.valid_bytes -= prev[1]
-        self._after_write(rec)
+        self._write_arrays(np.array([OP_DELETE], np.uint8),
+                           np.array([key], np.uint64),
+                           np.array([0], np.int64))
 
     def get(self, key: int):
         """-> vid or None."""
-        self.n_user_ops += 1
-        res = self.lookup_entries(np.array([key], np.uint64),
-                                  sio.CAT_FG_READ)
-        self.pump()
-        if not res["found"][0] or res["etype"][0] == ETYPE_TOMB:
-            return None
-        if res["etype"][0] == ETYPE_INLINE:
-            return int(res["vid"][0])
-        return self.read_value(key, int(res["vid"][0]),
-                               int(res["vfile"][0]), int(res["vsize"][0]),
-                               sio.CAT_FG_READ)
+        res = self.multi_get(np.array([key], np.uint64))
+        return int(res["vid"][0]) if res["found"][0] else None
 
     def scan(self, start_key: int, count: int):
-        """Range query: returns up to ``count`` (key, vid) pairs in order.
+        """Range query: returns up to ``count`` (key, vid) pairs in order."""
+        return self.multi_scan(np.array([start_key], np.int64), count)[0]
 
-        Per-source fetch limits adapt upward: dead entries (tombstones,
+    # ------------------------------------------------------- batched writes
+    def write(self, batch: WriteBatch) -> np.ndarray:
+        """Apply a WriteBatch atomically: one admission check, one
+        sequence-number range, one group-committed WAL append, chunked
+        vectorized memtable insertion.  Returns the vid per record (0 for
+        deletes), in batch order."""
+        kinds, keys, vsizes = batch.arrays()
+        return self._write_arrays(kinds, keys, vsizes)
+
+    def _write_arrays(self, kinds: np.ndarray, keys: np.ndarray,
+                      vsizes: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        n = len(keys)
+        vids_out = np.zeros(n, np.uint64)
+        if n == 0:
+            return vids_out
+        self._write_pressure()
+        is_put = kinds == OP_PUT
+        recs = np.where(is_put, cfg.key_bytes + vsizes + 12,
+                        cfg.key_bytes + 12).astype(np.int64)
+        total = int(recs.sum())
+        seqs = np.uint64(self.seq + 1) + np.arange(n, dtype=np.uint64)
+        self.seq += n
+        nput = int(is_put.sum())
+        vids_out[is_put] = (np.uint64(self.next_vid)
+                            + np.arange(nput, dtype=np.uint64))
+        self.next_vid += nput
+        self.io.seq_write(total, sio.CAT_WAL)   # one group-committed append
+        self.user_write_bytes += total
+        self.n_user_ops += n
+
+        ety = np.where(is_put, ETYPE_INLINE, ETYPE_TOMB).astype(np.uint8)
+        vsz = np.where(is_put, vsizes, 0).astype(np.int64)
+        vf = np.full(n, -1, np.int64)
+        entry_bytes = self.memtable.entry_bytes_batch(ety, vsz)
+        self.in_batch_write = True
+        try:
+            i = 0
+            while i < n:
+                i += self.memtable.put_batch(keys[i:], seqs[i:], ety[i:],
+                                             vids_out[i:], vsz[i:], vf[i:],
+                                             entry_bytes[i:])
+                if self.memtable.full and i < n:
+                    self.immutables.append(self.memtable)
+                    self.memtable = Memtable(cfg)
+                    self.pump()
+                    self._stall_while(
+                        lambda: len(self.immutables) > MAX_IMMUTABLES)
+        finally:
+            self.in_batch_write = False
+
+        # stats oracle: the last record per key wins (batch order = seq
+        # order); intermediate updates cancel out of valid_bytes exactly as
+        # they would applied one by one
+        last: dict[int, int] = {}
+        for j, k in enumerate(keys.tolist()):
+            last[k] = j
+        for k, j in last.items():
+            if is_put[j]:
+                prev = self.latest.get(k)
+                if prev is not None:
+                    self.valid_bytes -= prev[1]
+                self.latest[k] = (int(vids_out[j]), int(vsz[j]))
+                self.valid_bytes += int(vsz[j])
+            else:
+                prev = self.latest.pop(k, None)
+                if prev is not None:
+                    self.valid_bytes -= prev[1]
+        self._after_write(total)
+        return vids_out
+
+    # -------------------------------------------------------- batched reads
+    def multi_get(self, keys: np.ndarray) -> dict:
+        """Columnar point lookups for a whole key array.
+
+        Pushes the batch through the vectorized ``lookup_entries`` path and
+        coalesces vSST record fetches into adjacent runs (the lazy-read GC's
+        run-coalescing, §III-B.1); the batch issues at NVMe queue depth
+        ``min(len(keys), fg_qd_max)``, amortizing per-op latency floors.
+        Returns parallel arrays: ``found`` bool, ``vid``/``vsize`` (0 where
+        not found), ``etype``."""
+        keys = np.atleast_1d(np.asarray(keys, np.uint64))
+        n = len(keys)
+        self.n_user_ops += n
+        with self.io.batched(n):
+            res = self.lookup_entries(keys, sio.CAT_FG_READ)
+            live = res["found"] & (res["etype"] != ETYPE_TOMB)
+            refs = np.nonzero(live & (res["etype"] == ETYPE_REF))[0]
+            if len(refs):
+                self._read_values_batch(keys[refs], res["vid"][refs],
+                                        res["vfile"][refs],
+                                        res["vsize"][refs], sio.CAT_FG_READ,
+                                        strict=True)
+        self.pump()
+        return {"found": live,
+                "vid": np.where(live, res["vid"], 0).astype(np.uint64),
+                "vsize": np.where(live, res["vsize"], 0),
+                "etype": res["etype"]}
+
+    def multi_scan(self, starts: np.ndarray, count) -> list:
+        """Batched range queries: one result list of (key, vid) pairs per
+        start key, each up to ``count`` entries (scalar or per-start
+        array).  Scans share one deep-queue I/O window, so block fetches
+        amortize across the batch."""
+        starts = np.atleast_1d(np.asarray(starts)).astype(np.int64)
+        counts = np.broadcast_to(np.asarray(count, np.int64),
+                                 starts.shape)
+        self.n_user_ops += len(starts)
+        out = []
+        with self.io.batched(len(starts)):
+            for s, c in zip(starts.tolist(), counts.tolist()):
+                out.append(self._scan_retry(int(s), int(c)))
+        self.pump()
+        return out
+
+    def _scan_retry(self, start_key: int, count: int):
+        """Per-source fetch limits adapt upward: dead entries (tombstones,
         superseded versions) may eat slots, requiring a refill."""
-        self.n_user_ops += 1
         limit = count
         for _ in range(32):
             out, min_excluded = self._scan_once(start_key, count, limit)
@@ -210,6 +301,12 @@ class Store:
         TerarkDB defaults; GC lags ingest, which is the source of the
         paper's space-amplification backlog)."""
         if self.cfg.gc_scheme not in ("inherit", "writeback"):
+            return None
+        if self.in_batch_write:
+            # A WriteBatch applies atomically over one preassigned seq
+            # range; GC (whose Titan writebacks mint fresh seqs) must not
+            # interleave with it or a written-back locator could outrank a
+            # not-yet-inserted batch record.  GC resumes at batch end.
             return None
         cands = gcmod.gc_candidates(self, self._gc_threshold())
         if cands:
@@ -471,45 +568,63 @@ class Store:
             if guard > 10_000:
                 raise RuntimeError("inheritance chain cycle")
 
-    def read_value(self, key: int, vid: int, vfile: int, vsize: int,
-                   cat: str):
-        t = self.resolve_value_file(vfile, key, vid)
-        assert t is not None, f"value file for key {key} lost"
-        pos = int(t.find(np.array([key], np.uint64))[0])
-        assert pos >= 0 and int(t.vids[pos]) == vid, "stale locator"
-        rec = int(t.rec_bytes[pos])
-        if t.layout == "rtable":
-            self.read_block(t, "ib", int(t.index_block_of[pos]), cat,
-                            BlockCache.PRI_HIGH, t.index_block_bytes())
-            self.read_block(t, "rec", pos, cat, BlockCache.PRI_LOW, rec)
-        else:
-            self.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
-                            t.index_block_bytes())
-            b = int(t.block_of[pos])
-            self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW,
-                            max(rec, t.data_block_bytes(0, b)))
-        return vid
+    def _read_values_batch(self, keys, vids, vfiles, vsizes, cat,
+                           strict: bool = False) -> None:
+        """Coalesced value fetches for multi_get / scans.
 
-    def _read_values_batch(self, keys, vids, vfiles, vsizes, cat) -> None:
-        """Coalesced value fetches for scans."""
-        by_file: dict[int, list[int]] = {}
+        Groups records by live vSST, reads each file's index blocks once,
+        then fetches records as adjacent-position runs — one random I/O per
+        run instead of one per record (the same run-coalescing the lazy-read
+        GC applies, §III-B.1).  Cache bookkeeping stays per record so the
+        one-record case charges exactly one read per block.
+
+        ``strict`` (multi_get): every entry won a newest-wins lookup, so an
+        unresolvable file or vid mismatch means GC dropped live data.  Scans
+        stay lenient: a truncated ``_scan_once`` pass can surface a
+        superseded REF whose record GC already reclaimed — ``_scan_retry``
+        re-runs it with a larger limit."""
+        by_file: dict[int, set[int]] = {}
         for k, vid, vf in zip(keys.tolist(), vids.tolist(), vfiles.tolist()):
             t = self.resolve_value_file(int(vf), int(k), int(vid))
-            if t is None:
+            if strict:
+                assert t is not None, f"value file for key {k} lost"
+            elif t is None:
                 continue
             pos = int(t.find(np.array([k], np.uint64))[0])
-            if pos >= 0:
-                by_file.setdefault(t.fid, []).append(pos)
-        for fid, poss in by_file.items():
+            if strict:
+                assert pos >= 0 and int(t.vids[pos]) == vid, "stale locator"
+            elif pos < 0:
+                continue
+            by_file.setdefault(t.fid, set()).add(pos)
+        for fid, posset in by_file.items():
             t = self.version.value_files[fid]
+            pos = np.array(sorted(posset), np.int64)
             if t.layout == "rtable":
-                for p in sorted(set(poss)):
-                    self.read_block(t, "rec", p, cat, BlockCache.PRI_LOW,
-                                    int(t.rec_bytes[p]))
+                for b in np.unique(t.index_block_of[pos]).tolist():
+                    self.read_block(t, "ib", b, cat, BlockCache.PRI_HIGH,
+                                    t.index_block_bytes())
+                runs = np.split(pos, np.nonzero(np.diff(pos) != 1)[0] + 1)
+                for r in runs:
+                    nbytes = 0
+                    for p in r.tolist():
+                        ck = (t.fid, "rec", p)
+                        if self.cache.get(ck):
+                            self.io.cache_hit(cat)
+                        else:
+                            rb = int(t.rec_bytes[p])
+                            nbytes += rb
+                            self.cache.put(ck, rb, BlockCache.PRI_LOW)
+                    if nbytes:
+                        self.io.rand_read(nbytes, cat)
             else:
-                for b in np.unique(t.block_of[np.array(poss)]).tolist():
-                    self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW,
-                                    t.data_block_bytes(0, b))
+                self.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
+                                t.index_block_bytes())
+                blocks = t.block_of[pos]
+                for b in np.unique(blocks).tolist():
+                    m = pos[blocks == b]
+                    nb = max(int(t.rec_bytes[m].max()),
+                             t.data_block_bytes(0, b))
+                    self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW, nb)
 
     def build_value_files(self, keys, vids, vsizes, cat: str):
         """Build vSST(s) from sorted records, hot/cold-split when enabled.
@@ -623,20 +738,41 @@ class Store:
     # ============================================================ writeback
     def writeback_index(self, key: int, vid: int, vsize: int,
                         vfile: int) -> None:
-        """Titan Write-Index: new locator through the foreground write path.
+        """Titan Write-Index for one locator (shim over the batched path)."""
+        self.writeback_index_batch(np.array([key], np.uint64),
+                                   np.array([vid], np.uint64),
+                                   np.array([vsize], np.int64),
+                                   np.array([vfile], np.int64))
 
-        Each writeback is a Put() — WAL append + memtable insert competing
-        with foreground writes for the WAL/commit path; charged at the
-        unamortized per-op cost (this is why the paper measures ~38% of
-        Titan's GC latency in this step)."""
-        self.seq += 1
+    def writeback_index_batch(self, keys, vids, vsizes, vfiles) -> None:
+        """Titan Write-Index: new locators through the foreground write
+        path, group-committed as one WriteBatch (Titan batches its GC index
+        rewrites internally).
+
+        The WAL append is batched, but each writeback still pays the
+        per-record commit-queue cost competing with foreground writes —
+        this unamortized step is why the paper measures ~38% of Titan's GC
+        latency in Write-Index."""
+        n = len(keys)
+        if n == 0:
+            return
         rec = self.cfg.ref_rec_bytes()
-        self.io.seq_write(rec, sio.CAT_GC_WRITE_INDEX)
-        self.io.stall(self.io.device.seq_op_us, sio.CAT_GC_WRITE_INDEX)
-        self.memtable.put_ref(key, self.seq, vid, vsize, vfile)
-        if self.memtable.full:
-            self.immutables.append(self.memtable)
-            self.memtable = Memtable(self.cfg)
+        seqs = np.uint64(self.seq + 1) + np.arange(n, dtype=np.uint64)
+        self.seq += n
+        self.io.seq_write(n * rec, sio.CAT_GC_WRITE_INDEX)
+        self.io.stall(n * self.io.device.seq_op_us, sio.CAT_GC_WRITE_INDEX)
+        keys = np.asarray(keys, np.uint64)
+        ety = np.full(n, ETYPE_REF, np.uint8)
+        vids = np.asarray(vids, np.uint64)
+        vsz = np.asarray(vsizes, np.int64)
+        vf = np.asarray(vfiles, np.int64)
+        i = 0
+        while i < n:
+            i += self.memtable.put_batch(keys[i:], seqs[i:], ety[i:],
+                                         vids[i:], vsz[i:], vf[i:])
+            if self.memtable.full:
+                self.immutables.append(self.memtable)
+                self.memtable = Memtable(self.cfg)
 
     # ================================================================ stats
     def space_bytes(self) -> int:
@@ -695,6 +831,7 @@ class Store:
             "clock_s": self.io.clock_us / 1e6,
             "space_bytes": self.space_bytes(),
             "valid_bytes": self.valid_bytes,
+            "user_write_bytes": self.user_write_bytes,
             "space_amp": self.space_amplification(),
             "s_index": self.s_index(),
             "exposed_over_valid": self.exposed_over_valid(),

@@ -113,8 +113,17 @@ def _apply_opt(cfg):
     return dataclasses.replace(cfg, attn_impl="chunked", gqa_grouped=True)
 
 
-def _cost_fields(compiled) -> dict:
+def _cost_dict(compiled) -> dict:
+    """cost_analysis() returns a dict on new jax, a per-computation list of
+    dicts on older releases — normalize to one dict."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _cost_fields(compiled) -> dict:
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": cost.get("flops", 0.0),
             "bytes": cost.get("bytes accessed", 0.0),
@@ -240,7 +249,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     compile_s = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_info = {

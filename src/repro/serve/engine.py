@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import EngineConfig, Store, WriteBatch
+
 from .paged_cache import PagedKVCacheManager
 
 
@@ -30,7 +32,8 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, batch_slots: int = 4,
                  cache_len: int = 256, page_size: int = 16,
-                 hbm_pages: int | None = None):
+                 hbm_pages: int | None = None,
+                 meta_store: Store | None = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -41,6 +44,12 @@ class ServeEngine:
         per_layer_pages = max(1, cache_len // page_size)
         self.pager = PagedKVCacheManager(
             n_pages, page_size, extent_pages=max(4, per_layer_pages // 2))
+        # per-request paged-cache metadata (page-table records) lives in a
+        # small KV store; admission/retirement waves go through the batched
+        # write path (one WriteBatch per wave), mirroring how the Titan
+        # writeback GC batches its index rewrites
+        self.meta = meta_store or Store(
+            EngineConfig.scaled("scavenger", 4 << 20))
         self.cache = model.init_cache(batch_slots, cache_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)
@@ -53,22 +62,43 @@ class ServeEngine:
         self.queue.append(req)
 
     def _admit(self) -> None:
-        for i in range(self.slots):
-            if self.slot_req[i] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            need = (len(req.prompt) + req.max_new
-                    + self.page_size - 1) // self.page_size
-            if not self.pager.admit(req.rid, need, hot=req.hot):
-                break                      # HBM full: wait for GC headroom
-            self.queue.pop(0)
-            self.slot_req[i] = req
-            self.slot_pos[i] = 0
-            # prefill token-by-token (keeps a single compiled step)
-            for t in req.prompt[:-1]:
-                self._single(i, t)
-            self._pending_first = (i, req.prompt[-1])
-            self._single(i, req.prompt[-1], sample=True)
+        admitted: list[tuple[int, int]] = []     # (rid, n_pages)
+        try:
+            for i in range(self.slots):
+                if self.slot_req[i] is not None or not self.queue:
+                    continue
+                req = self.queue[0]
+                need = (len(req.prompt) + req.max_new
+                        + self.page_size - 1) // self.page_size
+                # a live metadata record means this rid already owns pages —
+                # admitting it again would corrupt its page table; drop the
+                # duplicate before raising so the queue can still drain
+                if any(req.rid == a[0] for a in admitted) or bool(
+                        self.meta.multi_get(
+                            np.array([req.rid], np.uint64))["found"][0]):
+                    self.queue.pop(0)
+                    req.done = True
+                    raise ValueError(
+                        f"request id {req.rid} already admitted")
+                if not self.pager.admit(req.rid, need, hot=req.hot):
+                    break                  # HBM full: wait for GC headroom
+                self.queue.pop(0)
+                admitted.append((req.rid, need))
+                self.slot_req[i] = req
+                self.slot_pos[i] = 0
+                # prefill token-by-token (keeps a single compiled step)
+                for t in req.prompt[:-1]:
+                    self._single(i, t)
+                self._pending_first = (i, req.prompt[-1])
+                self._single(i, req.prompt[-1], sample=True)
+        finally:
+            # record the wave even if a later queue entry was rejected —
+            # an admitted request without a metadata record would dodge the
+            # duplicate-rid guard
+            if admitted:
+                rids = np.array([a[0] for a in admitted], np.uint64)
+                sizes = np.array([a[1] * 16 for a in admitted], np.int64)
+                self.meta.write(WriteBatch().puts(rids, sizes))
 
     def _single(self, slot: int, token: int, sample: bool = False) -> None:
         b = np.zeros((self.slots, 1), np.int32)
@@ -93,6 +123,7 @@ class ServeEngine:
         # NOTE: slots decode at their own positions; for simplicity (and
         # because smoke models are tiny) we step slots with equal pos
         # together and others individually.
+        finished: list[int] = []
         for i in occupied:
             req = self.slot_req[i]
             last = req.out[-1] if req.out else req.prompt[-1]
@@ -101,6 +132,10 @@ class ServeEngine:
                 req.done = True
                 self.pager.finish(req.rid)
                 self.slot_req[i] = None
+                finished.append(req.rid)
+        if finished:
+            self.meta.write(
+                WriteBatch().deletes(np.array(finished, np.uint64)))
         self.steps += 1
 
     def run(self, max_steps: int = 1000) -> None:
@@ -111,4 +146,5 @@ class ServeEngine:
     def stats(self) -> dict:
         s = self.pager.stats()
         s["steps"] = self.steps
+        s["meta_space_amp"] = self.meta.space_amplification()
         return s

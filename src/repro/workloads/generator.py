@@ -168,23 +168,54 @@ def fixed(size: int, dataset_bytes=32 << 20, **kw) -> WorkloadSpec:
 
 
 class Runner:
-    """Drives a Store through load / update / read / scan phases."""
+    """Drives a Store through load / update / read / scan phases.
 
-    def __init__(self, store, spec: WorkloadSpec):
+    Ops are issued through the batched columnar API (``WriteBatch`` /
+    ``multi_get`` / ``multi_scan``) in chunks of ``batch`` keys; the oracle
+    updates column-wise with the same last-write-wins semantics the store
+    applies inside a batch.  ``batch=1`` degenerates to the scalar loop."""
+
+    def __init__(self, store, spec: WorkloadSpec, batch: int = 256):
         self.store = store
         self.spec = spec
+        self.batch = max(1, int(batch))
         self.rng = np.random.default_rng(spec.seed)
         self.keys = (ZipfKeys(spec.n_keys, spec.zipf_theta, spec.seed)
                      if spec.zipf_theta else UniformKeys(spec.n_keys))
         self.oracle: dict[int, int] = {}
 
+    # ------------------------------------------------------------- batching
+    def apply_puts(self, keys: np.ndarray, sizes: np.ndarray) -> None:
+        """Write a key/vsize column in WriteBatch chunks, updating the
+        oracle (later occurrences of a key win, as in the store)."""
+        from repro.core.batch import WriteBatch
+        keys = np.asarray(keys).astype(np.uint64)
+        sizes = np.asarray(sizes).astype(np.int64)
+        for i in range(0, len(keys), self.batch):
+            kc, vc = keys[i:i + self.batch], sizes[i:i + self.batch]
+            vids = self.store.write(WriteBatch().puts(kc, vc))
+            self.oracle.update(zip(kc.tolist(), vids.tolist()))
+
+    def check_reads(self, keys: np.ndarray) -> int:
+        """multi_get a key column, compare against the oracle, return the
+        mismatch count (0 expected; vids start at 1, so 0 = not-found)."""
+        keys = np.asarray(keys).astype(np.uint64)
+        errors = 0
+        for i in range(0, len(keys), self.batch):
+            kc = keys[i:i + self.batch]
+            res = self.store.multi_get(kc)
+            expect = np.array([self.oracle.get(k, 0) for k in kc.tolist()],
+                              np.uint64)
+            errors += int((res["vid"] != expect).sum())
+        return errors
+
+    # --------------------------------------------------------------- phases
     def load(self) -> dict:
         """Insert every key once (random order), as the paper's load phase."""
         t0 = self.store.io.clock_us
         order = self.rng.permutation(self.spec.n_keys)
         sizes = self.spec.value_dist.sample(self.rng, self.spec.n_keys)
-        for k, vs in zip(order.tolist(), sizes.tolist()):
-            self.oracle[k] = self.store.put(k, int(vs))
+        self.apply_puts(order, sizes)
         self.store.flush()
         return {"phase": "load", "ops": self.spec.n_keys,
                 "sim_s": (self.store.io.clock_us - t0) / 1e6}
@@ -194,8 +225,7 @@ class Runner:
         t0 = self.store.io.clock_us
         ks = self.keys.sample(self.rng, n)
         sizes = self.spec.value_dist.sample(self.rng, n)
-        for k, vs in zip(ks.tolist(), sizes.tolist()):
-            self.oracle[int(k)] = self.store.put(int(k), int(vs))
+        self.apply_puts(ks, sizes)
         self.store.settle()
         return {"phase": "update", "ops": n,
                 "sim_s": (self.store.io.fg_clock_us - t0) / 1e6}
@@ -203,22 +233,21 @@ class Runner:
     def read(self, n: int) -> dict:
         t0 = self.store.io.fg_clock_us
         ks = self.keys.sample(self.rng, n)
-        errors = 0
-        for k in ks.tolist():
-            got = self.store.get(int(k))
-            expect = self.oracle.get(int(k))
-            if got != expect:
-                errors += 1
+        errors = self.check_reads(ks)
         assert errors == 0, f"{errors} read mismatches"
         return {"phase": "read", "ops": n,
                 "sim_s": (self.store.io.fg_clock_us - t0) / 1e6}
 
     def scan(self, n: int, max_len: int = 100) -> dict:
+        """Batched range queries with per-scan lengths — the same draws as
+        the scalar loop, one columnar multi_scan call per chunk."""
         t0 = self.store.io.fg_clock_us
         starts = self.rng.integers(0, self.spec.n_keys, n)
         lens = self.rng.integers(1, max_len + 1, n)
         total = 0
-        for s, ln in zip(starts.tolist(), lens.tolist()):
-            total += len(self.store.scan(int(s), int(ln)))
+        for i in range(0, n, self.batch):
+            for out in self.store.multi_scan(starts[i:i + self.batch],
+                                             lens[i:i + self.batch]):
+                total += len(out)
         return {"phase": "scan", "ops": n, "entries": total,
                 "sim_s": (self.store.io.fg_clock_us - t0) / 1e6}

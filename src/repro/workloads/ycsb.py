@@ -1,13 +1,21 @@
-"""YCSB core workloads A-F (paper §IV-C), scaled.
+"""YCSB core workloads A-F (paper §IV-C), scaled, issued in batches.
 
   A: 50% read / 50% update        B: 95% read / 5% update
   C: 100% read                    D: 95% read-latest / 5% insert
   E: 95% scan / 5% insert         F: 50% read / 50% read-modify-write
+
+The op stream is cut into segments of ``batch`` ops; within a segment all
+reads execute first as one ``multi_get`` (against segment-start state, the
+pipelined-client model), then scans as one ``multi_scan``, then all writes
+apply atomically as one ``WriteBatch``.  The oracle advances per segment
+with the same last-write-wins rule the store applies inside a batch.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.batch import WriteBatch
 
 from .generator import Runner, WorkloadSpec
 
@@ -22,7 +30,7 @@ YCSB_MIX = {
 
 
 def run_ycsb(store, spec: WorkloadSpec, workload: str, n_ops: int,
-             runner: Runner | None = None) -> dict:
+             runner: Runner | None = None, batch: int = 64) -> dict:
     """Run one YCSB workload; assumes the store is already loaded+updated
     (paper: 100GB load + 300GB updates before each YCSB run)."""
     mix = YCSB_MIX[workload.upper()]
@@ -35,35 +43,47 @@ def run_ycsb(store, spec: WorkloadSpec, workload: str, n_ops: int,
     next_key = spec.n_keys
     recent: list[int] = []
     errors = 0
-    for c in choice.tolist():
-        kind = kinds[c]
-        if kind in ("read", "rmw"):
-            k = int(r.keys.sample(rng, 1)[0])
-            got = store.get(k)
-            if got != r.oracle.get(k):
-                errors += 1
-            if kind == "rmw":
-                vs = int(spec.value_dist.sample(rng, 1)[0])
-                r.oracle[k] = store.put(k, vs)
-        elif kind == "update":
-            k = int(r.keys.sample(rng, 1)[0])
-            vs = int(spec.value_dist.sample(rng, 1)[0])
-            r.oracle[k] = store.put(k, vs)
-        elif kind == "insert":
-            vs = int(spec.value_dist.sample(rng, 1)[0])
-            r.oracle[next_key] = store.put(next_key, vs)
-            recent.append(next_key)
-            next_key += 1
-        elif kind == "read_latest":
-            pool = recent[-100:] if recent else [0]
-            k = int(pool[int(rng.integers(0, len(pool)))])
-            got = store.get(k)
-            if got != r.oracle.get(k):
-                errors += 1
-        elif kind == "scan":
-            s = int(rng.integers(0, spec.n_keys))
-            ln = int(rng.integers(1, 101))
-            store.scan(s, ln)
+    for s0 in range(0, n_ops, batch):
+        seg = choice[s0:s0 + batch]
+        read_keys: list[int] = []
+        write_keys: list[int] = []
+        write_sizes: list[int] = []
+        scan_starts: list[int] = []
+        for c in seg.tolist():
+            kind = kinds[c]
+            if kind in ("read", "rmw"):
+                k = int(r.keys.sample(rng, 1)[0])
+                read_keys.append(k)
+                if kind == "rmw":
+                    write_keys.append(k)
+                    write_sizes.append(int(spec.value_dist.sample(rng, 1)[0]))
+            elif kind == "update":
+                k = int(r.keys.sample(rng, 1)[0])
+                write_keys.append(k)
+                write_sizes.append(int(spec.value_dist.sample(rng, 1)[0]))
+            elif kind == "insert":
+                write_keys.append(next_key)
+                write_sizes.append(int(spec.value_dist.sample(rng, 1)[0]))
+                recent.append(next_key)
+                next_key += 1
+            elif kind == "read_latest":
+                pool = recent[-100:] if recent else [0]
+                read_keys.append(int(pool[int(rng.integers(0, len(pool)))]))
+            elif kind == "scan":
+                scan_starts.append(int(rng.integers(0, spec.n_keys)))
+        if read_keys:
+            res = store.multi_get(np.array(read_keys, np.uint64))
+            expect = np.array([r.oracle.get(k, 0) for k in read_keys],
+                              np.uint64)
+            errors += int((res["vid"] != expect).sum())
+        if scan_starts:
+            store.multi_scan(np.array(scan_starts, np.int64),
+                             rng.integers(1, 101, len(scan_starts)))
+        if write_keys:
+            vids = store.write(
+                WriteBatch().puts(np.array(write_keys, np.uint64),
+                                  np.array(write_sizes, np.int64)))
+            r.oracle.update(zip(write_keys, vids.tolist()))
     assert errors == 0, f"{errors} YCSB read mismatches"
     sim_s = (store.io.clock_us - t0) / 1e6
     return {"workload": workload, "ops": n_ops, "sim_s": sim_s,

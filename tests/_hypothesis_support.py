@@ -1,0 +1,38 @@
+"""Optional-dependency shim for hypothesis (declared in requirements.txt).
+
+``hypothesis`` drives the property tests but is not baked into every
+container this repo runs in.  Importing through this module keeps test
+*collection* working without it: plain tests still run, and each
+``@given``-decorated test turns into an explicit skip instead of a
+module-level ImportError.
+"""
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Stands in for strategies/HealthCheck so module-level strategy
+        definitions still evaluate; the tests using them are skipped."""
+
+        def __getattr__(self, name):
+            return _Anything()
+
+        def __call__(self, *args, **kwargs):
+            return _Anything()
+
+    st = _Anything()
+    HealthCheck = _Anything()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "settings", "st"]

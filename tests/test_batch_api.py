@@ -1,0 +1,191 @@
+"""Batched columnar API: batch/scalar parity across all five engines.
+
+The WriteBatch path must be *semantically* identical to the scalar loop:
+same vids, same oracle, byte-identical ``user_write_bytes`` always; and in
+the drain-converged regime (background work runs between writes, where
+group-commit clock skew cannot reorder the scheduler) byte-identical
+``space_amp`` and ``stall_us`` too — with GC active on the engines that
+have one.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ENGINES, EngineConfig, Store, WriteBatch
+
+PARITY_CFG = dict(
+    memtable_bytes=512 << 10, ksst_bytes=32 << 10, vsst_bytes=64 << 10,
+    base_level_bytes=64 << 10, cache_bytes=32 << 10, dropcache_keys=64,
+    sep_threshold=256, max_levels=5, gc_garbage_ratio=0.1)
+
+TINY_CFG = dict(
+    memtable_bytes=4 << 10, ksst_bytes=4 << 10, vsst_bytes=16 << 10,
+    base_level_bytes=8 << 10, cache_bytes=8 << 10, dropcache_keys=64,
+    sep_threshold=256, max_levels=5)
+
+
+def _op_stream(rounds=6, n=300, nkeys=120, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, nkeys, n).astype(np.uint64),
+             rng.choice([64, 600, 2000, 9000], n).astype(np.int64))
+            for _ in range(rounds)]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batch_scalar_parity_byte_identical(engine):
+    """Scalar loop vs WriteBatch+multi_get: identical oracle and
+    byte-identical user_write_bytes / space_amp / stall_us."""
+    stream = _op_stream()
+    s1 = Store(EngineConfig(engine=engine, **PARITY_CFG))
+    o1 = {}
+    for ks, vs in stream:
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            o1[k] = s1.put(int(k), int(v))
+        s1.flush()
+
+    s2 = Store(EngineConfig(engine=engine, **PARITY_CFG))
+    o2 = {}
+    for ks, vs in stream:
+        for i in range(0, len(ks), 64):
+            vids = s2.write(WriteBatch().puts(ks[i:i + 64], vs[i:i + 64]))
+            o2.update(zip(ks[i:i + 64].tolist(), vids.tolist()))
+        s2.flush()
+
+    assert o1 == o2, "vid assignment diverged"
+    st1, st2 = s1.stats(), s2.stats()
+    assert st1["user_write_bytes"] == st2["user_write_bytes"]
+    assert st1["space_amp"] == st2["space_amp"]
+    assert st1["stall_s"] == st2["stall_s"]
+    if s1.cfg.gc_scheme in ("inherit", "writeback"):
+        assert s1.n_gc_runs == s2.n_gc_runs > 0, "parity regime must GC"
+
+    # reads agree between the two stores and with the oracle
+    all_keys = np.arange(120, dtype=np.uint64)
+    r1, r2 = s1.multi_get(all_keys), s2.multi_get(all_keys)
+    np.testing.assert_array_equal(r1["found"], r2["found"])
+    np.testing.assert_array_equal(r1["vid"], r2["vid"])
+    for k in range(120):
+        expect = o1.get(k, 0)
+        assert int(r1["vid"][k]) == expect
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_multi_get_matches_oracle_under_churn(engine):
+    """Batched reads stay correct while rotations/compactions/GC interleave
+    (tiny config, GC active on the engines that have one)."""
+    rng = np.random.default_rng(11)
+    s = Store(EngineConfig(engine=engine, **TINY_CFG))
+    oracle = {}
+    for round_ in range(12):
+        ks = rng.integers(0, 50, 40).astype(np.uint64)
+        vs = rng.choice([64, 600, 4000], 40).astype(np.int64)
+        vids = s.write(WriteBatch().puts(ks, vs))
+        oracle.update(zip(ks.tolist(), vids.tolist()))
+        dels = rng.integers(0, 50, 4).astype(np.uint64)
+        s.write(WriteBatch().deletes(dels))
+        for k in dels.tolist():
+            oracle.pop(k, None)
+        res = s.multi_get(np.arange(50, dtype=np.uint64))
+        for k in range(50):
+            got = int(res["vid"][k]) if res["found"][k] else None
+            assert got == oracle.get(k), (round_, k)
+    s.flush()
+    for k in range(50):
+        assert s.get(k) == oracle.get(k)
+
+
+def test_writebatch_dup_keys_last_write_wins():
+    s = Store(EngineConfig(engine="scavenger", **TINY_CFG))
+    wb = WriteBatch()
+    wb.put(7, 100).put(7, 2000).delete(9).put(9, 300)
+    vids = s.write(wb)
+    assert len(vids) == 4 and vids[2] == 0    # deletes get no vid
+    assert s.get(7) == int(vids[1])
+    assert s.get(9) == int(vids[3])
+    wb2 = WriteBatch().put(7, 50).delete(7)
+    s.write(wb2)
+    assert s.get(7) is None
+
+
+def test_writebatch_atomic_seq_range_one_wal_append():
+    from repro.core.engine import io as sio
+    s = Store(EngineConfig(engine="scavenger", **PARITY_CFG))
+    seq0 = s.seq
+    wal_ops0 = s.io.write_ops[sio.CAT_WAL]
+    ks = np.arange(100, dtype=np.uint64)
+    s.write(WriteBatch().puts(ks, np.full(100, 600, np.int64)))
+    assert s.seq == seq0 + 100, "one contiguous sequence-number range"
+    assert s.io.write_ops[sio.CAT_WAL] == wal_ops0 + 1, \
+        "whole batch group-committed as one WAL append"
+
+
+def test_multi_scan_matches_scalar_scan():
+    rng = np.random.default_rng(5)
+    s = Store(EngineConfig(engine="scavenger", **TINY_CFG))
+    oracle = {}
+    for _ in range(6):
+        ks = rng.integers(0, 200, 60).astype(np.uint64)
+        vs = rng.choice([64, 600, 4000], 60).astype(np.int64)
+        vids = s.write(WriteBatch().puts(ks, vs))
+        oracle.update(zip(ks.tolist(), vids.tolist()))
+    starts = np.array([0, 17, 60, 150, 199], np.int64)
+    outs = s.multi_scan(starts, 12)
+    for st_, out in zip(starts.tolist(), outs):
+        assert out == s.scan(st_, 12)
+        exp = sorted(k for k in oracle if k >= st_)[:12]
+        assert out == [(k, oracle[k]) for k in exp]
+
+
+def test_multi_get_simulated_speedup_3x():
+    """Acceptance: multi_get >= 3x lower simulated us/op than the scalar
+    get loop at batch size 256 (quick scale)."""
+    from repro.workloads import Runner, pareto_1k
+
+    def loaded():
+        spec = pareto_1k(dataset_bytes=4 << 20)
+        store = Store(EngineConfig.scaled("scavenger", spec.dataset_bytes))
+        r = Runner(store, spec)
+        r.load()
+        r.update(spec.n_keys)
+        store.drain()
+        return store, r
+
+    s1, r1 = loaded()
+    keys = r1.keys.sample(np.random.default_rng(123), 256)
+    t0 = s1.io.fg_clock_us
+    for k in keys.tolist():
+        s1.get(int(k))
+    us_scalar = (s1.io.fg_clock_us - t0) / 256
+
+    s2, _ = loaded()
+    t0 = s2.io.fg_clock_us
+    s2.multi_get(keys.astype(np.uint64))
+    us_batch = (s2.io.fg_clock_us - t0) / 256
+    assert us_batch * 3 <= us_scalar, (us_scalar, us_batch)
+
+
+def test_scaled_dropcache_clamped_to_keyspace():
+    tiny = EngineConfig.scaled("scavenger", 64 << 10)
+    assert tiny.dropcache_keys < (64 << 10) // 1024, \
+        "DropCache must not cover the whole keyspace"
+    small = EngineConfig.scaled("scavenger", 64 << 10, est_keys=40)
+    assert small.dropcache_keys < 40
+    big = EngineConfig.scaled("scavenger", 1 << 30)
+    assert big.dropcache_keys >= 512
+
+
+def test_runner_batch_one_degenerates_to_scalar():
+    """batch=1 Runner must equal the batched Runner's oracle results."""
+    from repro.workloads import Runner, fixed
+    spec = fixed(600, dataset_bytes=64 << 10, update_factor=1.0)
+    s1 = Store(EngineConfig.scaled("scavenger", spec.dataset_bytes))
+    r1 = Runner(s1, spec, batch=1)
+    r1.load()
+    r1.update()
+    s2 = Store(EngineConfig.scaled("scavenger", spec.dataset_bytes))
+    r2 = Runner(s2, spec, batch=64)
+    r2.load()
+    r2.update()
+    assert r1.oracle == r2.oracle
+    assert r1.check_reads(np.arange(spec.n_keys)) == 0
+    assert r2.check_reads(np.arange(spec.n_keys)) == 0

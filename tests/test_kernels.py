@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose, assert_array_equal
+
+from _hypothesis_support import given, settings, st
 
 from repro.kernels import (bloom_build, bloom_probe, bloom_probe_ref,
                            gc_lookup, gc_lookup_ref, hot_cold_partition,

@@ -3,7 +3,8 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_support import given, settings, st
 
 from repro.configs import get_config
 from repro.models.model import build_model
@@ -86,6 +87,24 @@ def test_serve_engine_end_to_end():
     # all pages returned after completion
     eng.pager.run_gc()
     assert eng.pager.stats()["live_pages"] == 0
+
+
+def test_serve_duplicate_rid_rejected():
+    """Admission metadata (batched KV writes) guards against re-admitting a
+    live request id, which would corrupt its page table."""
+    cfg = get_config("smollm_360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = ServeEngine(model, params, batch_slots=2, cache_len=64)
+    eng.submit(Request(rid=7, prompt=[1, 2, 3], max_new=64))
+    eng.step()
+    eng.submit(Request(rid=7, prompt=[4, 5], max_new=4))
+    ok = Request(rid=8, prompt=[6], max_new=1)
+    eng.submit(ok)
+    with pytest.raises(ValueError, match="already admitted"):
+        eng.step()
+    eng.run(max_steps=10)       # duplicate was dropped; queue still drains
+    assert ok.done
 
 
 def test_serve_greedy_matches_forward():

@@ -3,7 +3,8 @@ interleaving of puts/deletes/gets/scans, with GC never losing data."""
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+from _hypothesis_support import HealthCheck, given, settings, st
 
 from repro.core import ENGINES, EngineConfig, Store
 
