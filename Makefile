@@ -9,4 +9,5 @@ test:
 	$(PY) -m pytest -x -q
 
 bench-smoke:
-	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api fig02_tradeoff
+	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api sharding \
+		fig02_tradeoff

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import os
 
-from repro.core import EngineConfig, Store
+from repro.core import EngineConfig, ShardedStore, Store
 from repro.workloads import (Runner, WorkloadSpec, fixed, mixed_8k,
                              pareto_1k)
 
@@ -32,6 +32,16 @@ def batch_size() -> int:
     return int(os.environ.get("REPRO_BATCH", "256"))
 
 
+def shard_count() -> int:
+    """Number of Store shards (REPRO_SHARDS, or --shards on
+    benchmarks.run); 1 = plain single Store."""
+    return int(os.environ.get("REPRO_SHARDS", "1"))
+
+
+def shard_policy() -> str:
+    return os.environ.get("REPRO_SHARD_POLICY", "range")
+
+
 def ds_bytes(quick_mb: int) -> int:
     mult = 4 if scale_name() == "full" else 1
     return quick_mb * mult << 20
@@ -39,11 +49,25 @@ def ds_bytes(quick_mb: int) -> int:
 
 def build(engine: str, spec: WorkloadSpec, quota_x: float | None = None,
           **overrides) -> tuple[Store, Runner]:
+    """Build a (possibly sharded) store + Runner for a workload spec.
+
+    With REPRO_SHARDS > 1 each shard gets a config scaled to its slice of
+    the dataset (a shard is a full store over 1/N of the keyspace), and the
+    space quota — when requested — is enforced fleet-wide."""
     quota = int(quota_x * spec.dataset_bytes) if quota_x else None
-    cfg = EngineConfig.scaled(engine, spec.dataset_bytes,
-                              est_keys=spec.n_keys,
-                              space_quota_bytes=quota, **overrides)
-    store = Store(cfg)
+    shards = shard_count()
+    if shards > 1:
+        cfg = EngineConfig.scaled(engine, spec.dataset_bytes // shards,
+                                  est_keys=max(64, spec.n_keys // shards),
+                                  space_quota_bytes=quota, **overrides)
+        store = ShardedStore(cfg, n_shards=shards,
+                             shard_policy=shard_policy(),
+                             key_space=spec.n_keys)
+    else:
+        cfg = EngineConfig.scaled(engine, spec.dataset_bytes,
+                                  est_keys=spec.n_keys,
+                                  space_quota_bytes=quota, **overrides)
+        store = Store(cfg)
     return store, Runner(store, spec, batch=batch_size())
 
 

@@ -1,12 +1,14 @@
 """Benchmark harness entrypoint — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_SCALE=quick|full.
-Select modules: python -m benchmarks.run [module ...]
+Select modules: python -m benchmarks.run [--shards N]
+[--shard-policy {hash,range}] [module ...]
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import os
 import time
 import traceback
 
@@ -14,14 +16,25 @@ MODULES = [
     "fig02_tradeoff", "fig03_gc_breakdown", "fig05_spaceamp_sources",
     "fig12_micro", "fig13_ycsb", "fig14_nolimit", "fig16_features",
     "fig17_ablation_space", "fig19_workloads", "fig20_space_limits",
-    "table1_space_overhead", "batch_api", "kernels_bench", "serving_cache",
-    "checkpoint_store", "roofline",
+    "table1_space_overhead", "batch_api", "sharding", "kernels_bench",
+    "serving_cache", "checkpoint_store", "roofline",
 ]
 
 
 def main() -> None:
     import importlib
-    names = sys.argv[1:] or MODULES
+    ap = argparse.ArgumentParser()
+    ap.add_argument("modules", nargs="*", default=None)
+    ap.add_argument("--shards", type=int, default=None,
+                    help="run workloads against a ShardedStore of N shards")
+    ap.add_argument("--shard-policy", choices=("hash", "range"),
+                    default=None)
+    args = ap.parse_args()
+    if args.shards is not None:
+        os.environ["REPRO_SHARDS"] = str(args.shards)
+    if args.shard_policy is not None:
+        os.environ["REPRO_SHARD_POLICY"] = args.shard_policy
+    names = args.modules or MODULES
     print("name,us_per_call,derived")
     failures = 0
     for name in names:

@@ -6,6 +6,8 @@ rocksdb | blobdb | titan | terarkdb | scavenger.
 
 from .batch import WriteBatch
 from .engine.config import EngineConfig, ENGINES
+from .sharding import FleetScheduler, ShardedStore
 from .store import Store
 
-__all__ = ["EngineConfig", "ENGINES", "Store", "WriteBatch"]
+__all__ = ["EngineConfig", "ENGINES", "FleetScheduler", "ShardedStore",
+           "Store", "WriteBatch"]

@@ -19,6 +19,35 @@ OP_PUT = 0
 OP_DELETE = 1
 
 
+class ScalarOps:
+    """Scalar one-record shims over the batched columnar API.
+
+    Mixed into ``Store`` and ``ShardedStore``; hosts need
+    ``_write_arrays`` / ``multi_get`` / ``multi_scan``.
+    """
+
+    def put(self, key: int, vsize: int) -> int:
+        """Write key with a value of ``vsize`` bytes; returns the vid."""
+        vids = self._write_arrays(np.array([OP_PUT], np.uint8),
+                                  np.array([key], np.uint64),
+                                  np.array([vsize], np.int64))
+        return int(vids[0])
+
+    def delete(self, key: int) -> None:
+        self._write_arrays(np.array([OP_DELETE], np.uint8),
+                           np.array([key], np.uint64),
+                           np.array([0], np.int64))
+
+    def get(self, key: int):
+        """-> vid or None."""
+        res = self.multi_get(np.array([key], np.uint64))
+        return int(res["vid"][0]) if res["found"][0] else None
+
+    def scan(self, start_key: int, count: int):
+        """Range query: returns up to ``count`` (key, vid) pairs in order."""
+        return self.multi_scan(np.array([start_key], np.int64), count)[0]
+
+
 class WriteBatch:
     __slots__ = ("_kinds", "_keys", "_vsizes")
 

@@ -154,7 +154,7 @@ def run_compaction(store, level: int, base_level: int) -> None:
         for t in ranked:
             ups.append(t)
             moved += sz(t)
-            if moved >= overshoot or len(ups) >= 64:
+            if moved >= overshoot or len(ups) >= cfg.compaction_pick_cap:
                 break
         out_level = level + 1
         lo = min(t.min_key for t in ups)

@@ -58,7 +58,11 @@ class EngineConfig:
     gc_garbage_ratio: float = 0.2
     gc_aggressive_ratio: float = 0.05
     gc_batch_files: int = 4         # max candidate vSSTs merged per GC run
+    gc_batch_cap: int = 32          # hard cap on files per GC batch
     blobdb_age_cutoff: float = 0.25
+
+    # ---- compaction job sizing ----
+    compaction_pick_cap: int = 64   # max input files picked per compaction
 
     # ---- space management ----
     space_quota_bytes: int | None = None

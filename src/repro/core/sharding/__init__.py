@@ -1,0 +1,15 @@
+"""Sharding subsystem: ShardedStore + fleet-level GC/compaction scheduler.
+
+``ShardedStore`` partitions the keyspace across N independent ``Store``
+shards (hash or range routing) behind the same batched columnar API, and
+replaces per-shard ``pump()`` with a ``FleetScheduler`` that ranks GC jobs
+by garbage ratio and compaction jobs by compensated-size score across the
+whole fleet, under shared I/O-lane and space budgets.  See DESIGN.md §6.
+"""
+
+from .fleet import SCHEDULERS, FleetScheduler
+from .router import POLICIES, HashRouter, RangeRouter, make_router, scatter
+from .store import ShardedStore
+
+__all__ = ["ShardedStore", "FleetScheduler", "SCHEDULERS", "POLICIES",
+           "HashRouter", "RangeRouter", "make_router", "scatter"]

@@ -1,0 +1,88 @@
+"""Shard routers: vectorized key -> shard assignment and scatter plans.
+
+Two placement policies:
+
+  * hash  — ``splitmix64(key) % n_shards``: uniform load regardless of key
+    skew, but keys interleave across shards, so range scans must fan out to
+    every shard and merge (see ``ShardedStore.multi_scan``).
+  * range — the keyspace ``[0, key_space)`` is cut into ``n_shards`` equal
+    contiguous slices: a scan touches the owning shard and spills into at
+    most the next shard(s), and per-shard key locality is preserved.  Keys
+    at or beyond ``key_space`` (e.g. YCSB insert appends) land in the last
+    shard.
+
+``scatter`` produces one permutation that groups a key column by shard;
+results are written back through the same permutation so callers always see
+original batch order (gather-with-original-order reassembly).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..engine.keys import splitmix64
+
+POLICIES = ("hash", "range")
+
+
+class HashRouter:
+    policy = "hash"
+
+    def __init__(self, n_shards: int):
+        self.n_shards = int(n_shards)
+
+    def shard_of(self, keys: np.ndarray) -> np.ndarray:
+        ks = np.asarray(keys, np.uint64)
+        return (splitmix64(ks) % np.uint64(self.n_shards)).astype(np.int64)
+
+
+class RangeRouter:
+    policy = "range"
+
+    def __init__(self, n_shards: int, key_space: int):
+        self.n_shards = int(n_shards)
+        self.key_space = int(key_space)
+        if self.key_space < self.n_shards:
+            raise ValueError("key_space must be >= n_shards")
+        # upper bound (exclusive) of shard i is bounds[i]; last is implicit
+        self.bounds = np.array(
+            [(i + 1) * self.key_space // self.n_shards
+             for i in range(self.n_shards - 1)], np.uint64)
+
+    def shard_of(self, keys: np.ndarray) -> np.ndarray:
+        ks = np.asarray(keys, np.uint64)
+        return np.searchsorted(self.bounds, ks, side="right").astype(np.int64)
+
+    def shard_start(self, shard: int) -> int:
+        """Lowest key owned by ``shard`` (scan-continuation entry point)."""
+        return 0 if shard == 0 else int(self.bounds[shard - 1])
+
+
+def make_router(policy: str, n_shards: int, key_space: int | None = None):
+    if policy == "hash":
+        return HashRouter(n_shards)
+    if policy == "range":
+        if key_space is None:
+            raise ValueError("range policy requires key_space "
+                             "(upper bound of the dense key domain)")
+        return RangeRouter(n_shards, key_space)
+    raise ValueError(f"unknown shard policy {policy!r} (want one of "
+                     f"{POLICIES})")
+
+
+def scatter(shard_of: np.ndarray, n_shards: int):
+    """Group a routed column by shard.
+
+    Returns ``(order, starts, ends)``: ``order`` is a stable permutation
+    putting rows of the same shard adjacent (original relative order kept,
+    so per-shard sub-batches preserve WriteBatch append semantics);
+    ``order[starts[s]:ends[s]]`` are the original-row indices of shard
+    ``s``.  Writing results back through those indices restores original
+    batch order.
+    """
+    order = np.argsort(shard_of, kind="stable")
+    srt = shard_of[order]
+    ids = np.arange(n_shards, dtype=np.int64)
+    starts = np.searchsorted(srt, ids, side="left")
+    ends = np.searchsorted(srt, ids, side="right")
+    return order, starts, ends

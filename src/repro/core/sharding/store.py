@@ -1,0 +1,346 @@
+"""ShardedStore: N independent Store shards behind one batched Store API.
+
+The keyspace is partitioned across shards by a router (hash or range,
+``router.py``); the PR-1 batched API (``write`` / ``multi_get`` /
+``multi_scan``) is routed by one vectorized scatter-by-shard pass and
+results are reassembled in original batch order.  Background GC/compaction
+service is *not* per-shard: every shard's ``pump()`` delegates to one
+``FleetScheduler`` (``fleet.py``) that ranks pending jobs fleet-wide under
+shared lane and space budgets.
+
+Semantics:
+
+  * A ``WriteBatch`` splits into per-shard sub-batches, each applied
+    atomically by its shard (one seq range / WAL append per shard touched).
+    Records of the same key always land on the same shard, so last-write-
+    wins inside a batch is preserved.
+  * ``multi_scan`` is exact under the range policy (owning shard, spilling
+    into successor shards until ``count`` is filled); under the hash policy
+    keys interleave across shards, so each scan fans out to every shard and
+    merges — correct but N-fold the I/O (this is why range is the policy
+    for scan-heavy workloads).
+  * ``n_shards=1`` is byte-identical to a plain ``Store`` — same clocks,
+    stats, and scheduling decisions (asserted by ``tests/test_sharding.py``
+    on all five engines).
+
+Stats aggregate across shards: sums for byte/op counters, ratios recomputed
+from fleet-wide numerators/denominators, ``clock_s`` as the max shard clock
+(shards run concurrently).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..batch import ScalarOps, WriteBatch
+from ..engine.config import EngineConfig
+from ..store import Store
+from .fleet import FleetScheduler
+from .router import HashRouter, make_router, scatter
+
+
+class FleetClock:
+    """Read-only SimIO facade over the shard SimIOs (Runner/benchmark
+    contract): clocks are the slowest shard's (shards run concurrently);
+    byte/op/time counters sum across shards."""
+
+    def __init__(self, shards):
+        self._shards = shards
+
+    @property
+    def clock_us(self) -> float:
+        return max(s.io.clock_us for s in self._shards)
+
+    @property
+    def fg_clock_us(self) -> float:
+        return max(s.io.fg_clock_us for s in self._shards)
+
+    def _summed(self, field: str) -> dict:
+        out: dict = {}
+        for s in self._shards:
+            for k, v in getattr(s.io, field).items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    @property
+    def time_us(self) -> dict:
+        return self._summed("time_us")
+
+    @property
+    def read_bytes(self) -> dict:
+        return self._summed("read_bytes")
+
+    @property
+    def write_bytes(self) -> dict:
+        return self._summed("write_bytes")
+
+    @property
+    def read_ops(self) -> dict:
+        return self._summed("read_ops")
+
+    @property
+    def write_ops(self) -> dict:
+        return self._summed("write_ops")
+
+    def total_read_bytes(self) -> int:
+        return sum(s.io.total_read_bytes() for s in self._shards)
+
+    def total_write_bytes(self) -> int:
+        return sum(s.io.total_write_bytes() for s in self._shards)
+
+    def gc_time_us(self) -> float:
+        return sum(s.io.gc_time_us() for s in self._shards)
+
+
+class ShardedStore(ScalarOps):
+    def __init__(self, cfg: EngineConfig, n_shards: int = 1,
+                 shard_policy: str = "range", key_space: int | None = None,
+                 scheduler: str = "fleet", aging_rate: float = 0.05):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.cfg = cfg
+        self.n_shards = int(n_shards)
+        self.shard_policy = shard_policy
+        # fleet-wide space quota: shards run quota-free, the fleet enforces
+        # the shared budget (single-shard stores keep Store's own path so
+        # n_shards=1 stays byte-identical to Store)
+        fleet_quota = None
+        shard_cfg = cfg
+        if self.n_shards > 1 and cfg.space_quota_bytes is not None:
+            fleet_quota = cfg.space_quota_bytes
+            shard_cfg = dataclasses.replace(cfg, space_quota_bytes=None)
+        self.shards = [Store(dataclasses.replace(shard_cfg))
+                       for _ in range(self.n_shards)]
+        self.router = (HashRouter(1) if self.n_shards == 1
+                       else make_router(shard_policy, self.n_shards,
+                                        key_space))
+        self.fleet = FleetScheduler(
+            self.shards, policy=scheduler, aging_rate=aging_rate,
+            space_quota_bytes=fleet_quota,
+            soft_quota_frac=cfg.soft_quota_frac)
+        self.io = FleetClock(self.shards)
+
+    # ================================================================== API
+    # (scalar put/get/delete/scan come from the shared ScalarOps shims)
+
+    # ------------------------------------------------------- batched writes
+    def write(self, batch: WriteBatch) -> np.ndarray:
+        kinds, keys, vsizes = batch.arrays()
+        return self._write_arrays(kinds, keys, vsizes)
+
+    def _write_arrays(self, kinds, keys, vsizes) -> np.ndarray:
+        n = len(keys)
+        if n == 0:
+            return np.zeros(0, np.uint64)
+        self._fleet_write_pressure()
+        if self.n_shards == 1:
+            return self.shards[0]._write_arrays(kinds, keys, vsizes)
+        sid = self.router.shard_of(keys)
+        order, starts, ends = scatter(sid, self.n_shards)
+        vids_out = np.zeros(n, np.uint64)
+        for s in range(self.n_shards):
+            rows = order[starts[s]:ends[s]]
+            if len(rows) == 0:
+                continue
+            vids_out[rows] = self.shards[s]._write_arrays(
+                kinds[rows], keys[rows], vsizes[rows])
+        return vids_out
+
+    def _fleet_write_pressure(self) -> None:
+        """Space-aware throttling against the shared fleet quota (the
+        fleet analogue of ``Store._write_pressure``)."""
+        quota = self.fleet.space_quota_bytes
+        if quota is None:
+            return
+        space = self.fleet.space_bytes()
+        if space < self.fleet.soft_quota_frac * quota:
+            return
+        if space >= quota:
+            # writers stall while the globally best GC jobs force-run; the
+            # foreground time each job adds (run_one syncs the owning
+            # shard's lanes to its fg clock) is charged as stall, matching
+            # Store._stall_while's accounting
+            before = [s.io.fg_clock_us for s in self.shards]
+            for _ in range(256):
+                if self.fleet.space_bytes() < quota:
+                    break
+                if not self.fleet.run_one(prefer_gc=True):
+                    break
+            for s, b in zip(self.shards, before):
+                s.stall_us += s.io.fg_clock_us - b
+        else:
+            # one slowdown per write call (Store semantics), charged to the
+            # shard holding the fleet wall clock so aggregate stall_s stays
+            # comparable between --shards 1 and --shards N runs
+            s = max(self.shards, key=lambda s: s.io.fg_clock_us)
+            s.io.stall(s.cfg.slowdown_us_per_write)
+            s.stall_us += s.cfg.slowdown_us_per_write
+            self.fleet.pump()
+
+    # -------------------------------------------------------- batched reads
+    def multi_get(self, keys: np.ndarray) -> dict:
+        keys = np.atleast_1d(np.asarray(keys, np.uint64))
+        if self.n_shards == 1:
+            return self.shards[0].multi_get(keys)
+        n = len(keys)
+        sid = self.router.shard_of(keys)
+        order, starts, ends = scatter(sid, self.n_shards)
+        out = {"found": np.zeros(n, bool),
+               "vid": np.zeros(n, np.uint64),
+               "vsize": np.zeros(n, np.int64),
+               "etype": np.full(n, 255, np.uint8)}
+        for s in range(self.n_shards):
+            rows = order[starts[s]:ends[s]]
+            if len(rows) == 0:
+                continue
+            res = self.shards[s].multi_get(keys[rows])
+            for f in out:
+                out[f][rows] = res[f]
+        return out
+
+    def multi_scan(self, starts: np.ndarray, count) -> list:
+        starts = np.atleast_1d(np.asarray(starts)).astype(np.int64)
+        counts = np.broadcast_to(np.asarray(count, np.int64), starts.shape)
+        if self.n_shards == 1:
+            return self.shards[0].multi_scan(starts, counts)
+        if self.router.policy == "hash":
+            return self._multi_scan_fanout(starts, counts)
+        return self._multi_scan_range(starts, counts)
+
+    def _multi_scan_fanout(self, starts, counts) -> list:
+        """Hash policy: keys interleave across shards, so every scan asks
+        every shard and merges (keys are disjoint across shards, so the
+        merge is a sort-by-key concat truncated to count)."""
+        per_shard = [s.multi_scan(starts, counts) for s in self.shards]
+        out = []
+        for i, c in enumerate(counts.tolist()):
+            merged = sorted(
+                (pair for res in per_shard for pair in res[i]))
+            out.append(merged[:int(c)])
+        return out
+
+    def _multi_scan_range(self, starts, counts) -> list:
+        """Range policy: scan the owning shard, spill into successor shards
+        (whose every key is larger) until count is filled.  Spills walk the
+        shards in order, all still-unfilled scans batched into one
+        multi_scan per successor shard so the deep-queue I/O window is
+        kept."""
+        sid = self.router.shard_of(starts.astype(np.uint64))
+        order, s_starts, s_ends = scatter(sid, self.n_shards)
+        out: list = [None] * len(starts)
+        for s in range(self.n_shards):
+            rows = order[s_starts[s]:s_ends[s]]
+            if len(rows) == 0:
+                continue
+            res = self.shards[s].multi_scan(starts[rows], counts[rows])
+            for r, got in zip(rows.tolist(), res):
+                out[r] = got
+        cnt = counts.tolist()
+        for sh in range(1, self.n_shards):
+            need = [i for i in range(len(starts))
+                    if sid[i] < sh and len(out[i]) < cnt[i]]
+            if not need:
+                continue
+            rem = np.array([cnt[i] - len(out[i]) for i in need], np.int64)
+            more = self.shards[sh].multi_scan(starts[need], rem)
+            for i, got in zip(need, more):
+                out[i] = out[i] + got
+        return out
+
+    # ===================================================== background lanes
+    def pump(self) -> None:
+        self.fleet.pump()
+
+    def settle(self) -> None:
+        self.fleet.pump()
+
+    def drain(self) -> None:
+        self.fleet.drain()
+
+    def flush(self) -> None:
+        """Force-rotate every shard's memtable, then drain the fleet."""
+        from ..engine.memtable import Memtable
+        for s in self.shards:
+            if len(s.memtable):
+                s.immutables.append(s.memtable)
+                s.memtable = Memtable(s.cfg)
+        self.fleet.drain()
+
+    # ================================================================ stats
+    @property
+    def valid_bytes(self) -> int:
+        return sum(s.valid_bytes for s in self.shards)
+
+    @property
+    def user_write_bytes(self) -> int:
+        return sum(s.user_write_bytes for s in self.shards)
+
+    @property
+    def n_gc_runs(self) -> int:
+        return sum(s.n_gc_runs for s in self.shards)
+
+    @property
+    def n_compactions(self) -> int:
+        return sum(s.n_compactions for s in self.shards)
+
+    @property
+    def stall_us(self) -> float:
+        return sum(s.stall_us for s in self.shards)
+
+    def space_bytes(self) -> int:
+        return sum(s.space_bytes() for s in self.shards)
+
+    def space_amplification(self) -> float:
+        return self.space_bytes() / max(self.valid_bytes, 1)
+
+    def s_index(self) -> float:
+        """Fleet index space-amp: total kSST bytes over total last-level
+        bytes (aggregated numerator/denominator, not a mean of ratios)."""
+        tot = sum(s.version.ksst_total_bytes() for s in self.shards)
+        last = sum(s.version.level_bytes(s.version.last_nonempty_level())
+                   for s in self.shards)
+        return tot / max(last, 1)
+
+    def exposed_over_valid(self) -> float:
+        garbage = sum(s.version.value_garbage_bytes() for s in self.shards)
+        ref_valid = max(sum(s.valid_value_bytes() for s in self.shards), 1)
+        return garbage / ref_valid
+
+    def valid_value_bytes(self) -> int:
+        return sum(s.valid_value_bytes() for s in self.shards)
+
+    def hidden_garbage_bytes(self) -> int:
+        return sum(s.hidden_garbage_bytes() for s in self.shards)
+
+    def stats(self) -> dict:
+        from ..engine import io as sio
+        ss = [s.stats() for s in self.shards]
+        wal = sum(s.io.write_bytes.get(sio.CAT_WAL, 0) for s in self.shards)
+        write_bytes = sum(st["write_bytes"] for st in ss)
+        hits = sum(s.cache.hits for s in self.shards)
+        lookups = hits + sum(s.cache.misses for s in self.shards)
+        return {
+            "engine": self.cfg.engine,
+            "n_shards": self.n_shards,
+            "shard_policy": self.shard_policy,
+            "scheduler": self.fleet.policy,
+            "clock_s": max(st["clock_s"] for st in ss),
+            "space_bytes": self.space_bytes(),
+            "valid_bytes": self.valid_bytes,
+            "user_write_bytes": self.user_write_bytes,
+            "space_amp": self.space_amplification(),
+            "s_index": self.s_index(),
+            "exposed_over_valid": self.exposed_over_valid(),
+            "write_amp": (write_bytes - wal)
+            / max(self.user_write_bytes, 1),
+            "read_bytes": sum(st["read_bytes"] for st in ss),
+            "write_bytes": write_bytes,
+            "n_compactions": self.n_compactions,
+            "n_gc_runs": self.n_gc_runs,
+            "cache_hit_ratio": hits / lookups if lookups else 0.0,
+            "stall_s": self.stall_us / 1e6,
+            "gc_time_s": sum(st["gc_time_s"] for st in ss),
+            "shard_space_amp": [st["space_amp"] for st in ss],
+        }

@@ -22,7 +22,7 @@ import numpy as np
 
 from . import compaction as comp
 from . import gc as gcmod
-from .batch import OP_DELETE, OP_PUT, WriteBatch
+from .batch import OP_PUT, ScalarOps, WriteBatch
 from .engine import io as sio
 from .engine.cache import BlockCache, DropCache
 from .engine.config import EngineConfig
@@ -36,7 +36,7 @@ MAX_IMMUTABLES = 2
 DELAYED_WRITE_RATE = 16.0   # MB/s, RocksDB default under slowdown
 
 
-class Store:
+class Store(ScalarOps):
     def __init__(self, cfg: EngineConfig, io: SimIO | None = None):
         self.cfg = cfg
         self.io = io or SimIO()
@@ -52,6 +52,10 @@ class Store:
         self.in_batch_write = False
         self.compact_cursor: dict[int, int] = {}
         self._last_bg = "gc"
+        # When this store is a shard of a ShardedStore, the fleet scheduler
+        # owns background scheduling: pump() delegates to it so GC/compaction
+        # service is ranked across the whole fleet, not per shard.
+        self.scheduler = None
 
         # stats / bookkeeping
         self.latest: dict[int, tuple] = {}   # key -> (vid, vsize): oracle for
@@ -65,27 +69,8 @@ class Store:
 
     # ================================================================== API
     # The public API is batched and columnar (write / multi_get /
-    # multi_scan); the scalar methods below are thin one-record shims.
-    def put(self, key: int, vsize: int) -> int:
-        """Write key with a value of ``vsize`` bytes; returns the vid."""
-        vids = self._write_arrays(np.array([OP_PUT], np.uint8),
-                                  np.array([key], np.uint64),
-                                  np.array([vsize], np.int64))
-        return int(vids[0])
-
-    def delete(self, key: int) -> None:
-        self._write_arrays(np.array([OP_DELETE], np.uint8),
-                           np.array([key], np.uint64),
-                           np.array([0], np.int64))
-
-    def get(self, key: int):
-        """-> vid or None."""
-        res = self.multi_get(np.array([key], np.uint64))
-        return int(res["vid"][0]) if res["found"][0] else None
-
-    def scan(self, start_key: int, count: int):
-        """Range query: returns up to ``count`` (key, vid) pairs in order."""
-        return self.multi_scan(np.array([start_key], np.int64), count)[0]
+    # multi_scan); scalar put/get/delete/scan are the one-record ScalarOps
+    # shims shared with ShardedStore.
 
     # ------------------------------------------------------- batched writes
     def write(self, batch: WriteBatch) -> np.ndarray:
@@ -328,6 +313,9 @@ class Store:
 
     def pump(self) -> None:
         """Run background jobs that fit before the foreground clock."""
+        if self.scheduler is not None:
+            self.scheduler.pump()
+            return
         while self.io.bg_clock_us < self.io.fg_clock_us:
             job = self.next_compact_job()
             if job is None:

@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the paged-cache metadata store N ways")
+    ap.add_argument("--shard-policy", choices=("hash", "range"),
+                    default="hash")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,7 +37,9 @@ def main():
     model = build_model(cfg)
     params = model.init_params(jax.random.key(args.seed))
     engine = ServeEngine(model, params, batch_slots=args.slots,
-                         cache_len=args.cache_len)
+                         cache_len=args.cache_len,
+                         meta_shards=args.shards,
+                         meta_shard_policy=args.shard_policy)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for rid in range(args.requests):

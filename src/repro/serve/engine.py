@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EngineConfig, Store, WriteBatch
+from repro.core import EngineConfig, ShardedStore, Store, WriteBatch
 
 from .paged_cache import PagedKVCacheManager
 
@@ -33,7 +33,8 @@ class ServeEngine:
     def __init__(self, model, params, batch_slots: int = 4,
                  cache_len: int = 256, page_size: int = 16,
                  hbm_pages: int | None = None,
-                 meta_store: Store | None = None):
+                 meta_store: Store | None = None,
+                 meta_shards: int = 1, meta_shard_policy: str = "hash"):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -47,9 +48,18 @@ class ServeEngine:
         # per-request paged-cache metadata (page-table records) lives in a
         # small KV store; admission/retirement waves go through the batched
         # write path (one WriteBatch per wave), mirroring how the Titan
-        # writeback GC batches its index rewrites
-        self.meta = meta_store or Store(
-            EngineConfig.scaled("scavenger", 4 << 20))
+        # writeback GC batches its index rewrites.  meta_shards > 1 shards
+        # the metadata store (hash over rids — the rid domain is unbounded,
+        # so range partitioning has nothing to split on).
+        if meta_store is not None:
+            self.meta = meta_store
+        elif meta_shards > 1:
+            self.meta = ShardedStore(
+                EngineConfig.scaled("scavenger", (4 << 20) // meta_shards),
+                n_shards=meta_shards, shard_policy=meta_shard_policy,
+                key_space=1 << 20)      # rid domain bound for range policy
+        else:
+            self.meta = Store(EngineConfig.scaled("scavenger", 4 << 20))
         self.cache = model.init_cache(batch_slots, cache_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)

@@ -1,0 +1,232 @@
+"""Sharding subsystem: 1-shard parity, N-shard routing correctness, and
+fleet scheduling invariants.
+
+The headline contract (ISSUE 2 acceptance): ``ShardedStore(n_shards=1)``
+is *byte-identical* to a plain ``Store`` on all five engines — same vids,
+stats, clocks, and scheduling decisions — because with one shard the fleet
+scheduler's global ranking degenerates to exactly ``Store.pump``.  With N
+shards the store must still behave like a dict under any interleaving
+(read-your-writes through scatter/gather routing), and ``multi_scan`` must
+return globally key-ordered results on both placement policies.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_support import HealthCheck, given, settings, st
+
+from repro.core import ENGINES, EngineConfig, ShardedStore, Store, WriteBatch
+from repro.core.sharding import make_router, scatter
+
+PARITY_CFG = dict(
+    memtable_bytes=512 << 10, ksst_bytes=32 << 10, vsst_bytes=64 << 10,
+    base_level_bytes=64 << 10, cache_bytes=32 << 10, dropcache_keys=64,
+    sep_threshold=256, max_levels=5, gc_garbage_ratio=0.1)
+
+TINY_CFG = dict(
+    memtable_bytes=8 << 10, ksst_bytes=8 << 10, vsst_bytes=32 << 10,
+    base_level_bytes=16 << 10, cache_bytes=16 << 10, dropcache_keys=64,
+    sep_threshold=256, max_levels=5)
+
+PARITY_FIELDS = ("user_write_bytes", "space_amp", "stall_s", "s_index",
+                 "write_amp", "read_bytes", "write_bytes", "n_compactions",
+                 "n_gc_runs", "clock_s", "gc_time_s", "cache_hit_ratio")
+
+
+def _stream(rounds=5, n=300, nkeys=120, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, nkeys, n).astype(np.uint64),
+             rng.choice([64, 600, 2000, 9000], n).astype(np.int64))
+            for _ in range(rounds)]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_one_shard_parity_byte_identical(engine):
+    """ShardedStore(n_shards=1) == Store, byte for byte, GC active."""
+    stream = _stream()
+    s1 = Store(EngineConfig(engine=engine, **PARITY_CFG))
+    s2 = ShardedStore(EngineConfig(engine=engine, **PARITY_CFG), n_shards=1)
+    o1, o2 = {}, {}
+    for ks, vs in stream:
+        v1 = s1.write(WriteBatch().puts(ks, vs))
+        o1.update(zip(ks.tolist(), v1.tolist()))
+        s1.flush()
+        v2 = s2.write(WriteBatch().puts(ks, vs))
+        o2.update(zip(ks.tolist(), v2.tolist()))
+        s2.flush()
+    assert o1 == o2, "vid assignment diverged"
+    st1, st2 = s1.stats(), s2.stats()
+    for f in PARITY_FIELDS:
+        assert st1[f] == st2[f], (f, st1[f], st2[f])
+    if s1.cfg.gc_scheme in ("inherit", "writeback"):
+        assert s1.n_gc_runs == s2.n_gc_runs > 0, "parity regime must GC"
+    probe = np.arange(120, dtype=np.uint64)
+    r1, r2 = s1.multi_get(probe), s2.multi_get(probe)
+    np.testing.assert_array_equal(r1["found"], r2["found"])
+    np.testing.assert_array_equal(r1["vid"], r2["vid"])
+    assert s1.multi_scan(np.array([0, 40, 110]), 15) \
+        == s2.multi_scan(np.array([0, 40, 110]), 15)
+
+
+@pytest.mark.parametrize("policy", ["range", "hash"])
+@pytest.mark.parametrize("engine", ["titan", "scavenger"])
+def test_n_shard_read_your_writes(engine, policy):
+    """4-shard churn with deletes: every multi_get/multi_scan observes all
+    prior writes (scatter/gather routing, fleet-scheduled background)."""
+    rng = np.random.default_rng(7)
+    s = ShardedStore(EngineConfig(engine=engine, **TINY_CFG), n_shards=4,
+                     shard_policy=policy, key_space=200)
+    oracle = {}
+    for _ in range(8):
+        ks = rng.integers(0, 200, 80).astype(np.uint64)
+        vs = rng.choice([64, 600, 4000], 80).astype(np.int64)
+        vids = s.write(WriteBatch().puts(ks, vs))
+        oracle.update(zip(ks.tolist(), vids.tolist()))
+        dels = rng.integers(0, 200, 5).astype(np.uint64)
+        s.write(WriteBatch().deletes(dels))
+        for k in dels.tolist():
+            oracle.pop(k, None)
+        res = s.multi_get(np.arange(200, dtype=np.uint64))
+        for k in range(200):
+            got = int(res["vid"][k]) if res["found"][k] else None
+            assert got == oracle.get(k), k
+    s.flush()
+    assert s.n_compactions > 0
+    res = s.multi_get(np.arange(200, dtype=np.uint64))
+    for k in range(200):
+        got = int(res["vid"][k]) if res["found"][k] else None
+        assert got == oracle.get(k), k
+
+
+@pytest.mark.parametrize("policy", ["range", "hash"])
+def test_n_shard_multi_scan_ordering(policy):
+    """multi_scan returns globally key-ordered prefixes on both policies
+    (range: spill into successor shards; hash: full fan-out + merge)."""
+    rng = np.random.default_rng(11)
+    s = ShardedStore(EngineConfig(engine="scavenger", **TINY_CFG),
+                     n_shards=3, shard_policy=policy, key_space=150)
+    oracle = {}
+    for _ in range(5):
+        ks = rng.integers(0, 150, 60).astype(np.uint64)
+        vs = rng.choice([64, 600, 4000], 60).astype(np.int64)
+        vids = s.write(WriteBatch().puts(ks, vs))
+        oracle.update(zip(ks.tolist(), vids.tolist()))
+    starts = np.array([0, 23, 49, 50, 51, 99, 100, 149], np.int64)
+    counts = np.array([7, 60, 5, 5, 200, 1, 12, 3], np.int64)
+    outs = s.multi_scan(starts, counts)
+    for st_, c, out in zip(starts.tolist(), counts.tolist(), outs):
+        exp = sorted(k for k in oracle if k >= st_)[:c]
+        assert out == [(k, oracle[k]) for k in exp], (st_, c)
+        keys_out = [k for k, _ in out]
+        assert keys_out == sorted(keys_out)
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["put", "put", "put", "del", "get", "scan"]),
+        st.integers(min_value=0, max_value=60),       # key
+        st.sampled_from([64, 200, 600, 2000, 9000]),  # value size
+    ),
+    min_size=20, max_size=150)
+
+
+@pytest.mark.parametrize("policy", ["range", "hash"])
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy)
+def test_sharded_store_matches_dict_oracle(policy, ops):
+    s = ShardedStore(EngineConfig(engine="scavenger", **TINY_CFG),
+                     n_shards=3, shard_policy=policy, key_space=61)
+    oracle = {}
+    for op, key, vsize in ops:
+        if op == "put":
+            oracle[key] = s.put(key, vsize)
+        elif op == "del":
+            oracle.pop(key, None)
+            s.delete(key)
+        elif op == "get":
+            assert s.get(key) == oracle.get(key)
+        else:
+            got = s.scan(key, 10)
+            expect_keys = sorted(k for k in oracle if k >= key)[:10]
+            assert got == [(k, oracle[k]) for k in expect_keys]
+    s.flush()
+    for k in range(61):
+        assert s.get(k) == oracle.get(k), f"key {k} mismatch after drain"
+    assert dict(s.scan(0, 1000)) == oracle
+
+
+def test_fleet_quota_enforced_fleet_wide():
+    """With n_shards > 1 the space quota moves off the shards and is
+    enforced globally: total space stays near the quota, no data lost."""
+    ds = 128 << 10
+    cfg = EngineConfig(engine="scavenger", space_quota_bytes=int(3.0 * ds),
+                       **TINY_CFG)
+    s = ShardedStore(cfg, n_shards=2, shard_policy="range", key_space=32)
+    assert all(sh.cfg.space_quota_bytes is None for sh in s.shards)
+    assert s.fleet.space_quota_bytes == cfg.space_quota_bytes
+    oracle = {}
+    rng = np.random.default_rng(1)
+    for _ in range(400):
+        k = int(rng.integers(0, 32))
+        oracle[k] = s.put(k, 2000)
+        assert s.space_bytes() <= cfg.space_quota_bytes * 1.25, \
+            "fleet space should stay near the shared quota"
+    s.flush()
+    for k, v in oracle.items():
+        assert s.get(k) == v
+
+
+def test_fleet_starvation_aging_services_cold_shard():
+    """A cold shard's pending GC must eventually be serviced even while a
+    hot shard keeps producing higher-garbage candidates (aging reorders)."""
+    s = ShardedStore(EngineConfig(engine="scavenger", gc_garbage_ratio=0.05,
+                                  **TINY_CFG),
+                     n_shards=2, shard_policy="range", key_space=100)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        hot = rng.integers(0, 50, 60).astype(np.uint64)       # shard 0
+        cold = rng.integers(50, 100, 12).astype(np.uint64)    # shard 1
+        sizes_h = np.full(60, 1500, np.int64)
+        sizes_c = np.full(12, 1500, np.int64)
+        s.write(WriteBatch().puts(hot, sizes_h))
+        s.write(WriteBatch().puts(cold, sizes_c))
+        s.flush()
+    assert s.shards[0].n_gc_runs > 0
+    assert s.shards[1].n_gc_runs > 0, "cold shard starved of GC service"
+
+
+def test_router_scatter_gather_roundtrip():
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 1000, 500).astype(np.uint64)
+    for policy in ("hash", "range"):
+        router = make_router(policy, 4, key_space=1000)
+        sid = router.shard_of(keys)
+        assert sid.min() >= 0 and sid.max() < 4
+        order, starts, ends = scatter(sid, 4)
+        seen = np.zeros(len(keys), bool)
+        for sh in range(4):
+            rows = order[starts[sh]:ends[sh]]
+            assert (sid[rows] == sh).all()
+            # stable: original relative order preserved within a shard
+            assert (np.diff(rows) > 0).all() or len(rows) <= 1
+            seen[rows] = True
+        assert seen.all(), "scatter must partition the batch exactly"
+
+
+def test_range_router_overflow_keys_go_last_shard():
+    router = make_router("range", 4, key_space=100)
+    sid = router.shard_of(np.array([0, 24, 25, 99, 100, 10_000], np.uint64))
+    assert sid.tolist() == [0, 0, 1, 3, 3, 3]
+
+
+def test_bad_configs_raise():
+    cfg = EngineConfig(engine="scavenger", **TINY_CFG)
+    with pytest.raises(ValueError):
+        ShardedStore(cfg, n_shards=2, shard_policy="range")  # no key_space
+    with pytest.raises(ValueError):
+        ShardedStore(cfg, n_shards=2, shard_policy="nope", key_space=100)
+    with pytest.raises(ValueError):
+        ShardedStore(cfg, n_shards=2, shard_policy="hash", scheduler="nope")
+    with pytest.raises(ValueError):
+        ShardedStore(cfg, n_shards=0)
