@@ -1,13 +1,18 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: check test bench-smoke
+.PHONY: check test lint bench-smoke
 
-check: test bench-smoke
+check: lint test bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
+lint:
+	@$(PY) -m ruff --version >/dev/null 2>&1 || \
+		{ echo "ruff not installed (pip install ruff)"; exit 1; }
+	$(PY) -m ruff check src tests benchmarks
+
 bench-smoke:
-	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api sharding \
-		fig02_tradeoff
+	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api read_path \
+		sharding fig02_tradeoff

@@ -1,0 +1,50 @@
+"""Vectorized read/value-path microbenchmark (layered-core refactor row).
+
+Measures the post-refactor hot read path per engine: ``multi_get`` at batch
+256 (vectorized ``lookup_entries`` + run-coalesced ``read_values_batch``)
+and ``multi_scan``, reporting simulated us/op alongside the wall-clock
+us/op that the vectorization targets (``wall_us`` carries the Python-side
+planning cost: batched memtable probes, hoisted bloom hashing, one ``find``
+per touched file).  ``hybrid`` rides the same registry as the five paper
+engines, so the row doubles as a smoke test of the strategy layer.
+"""
+
+import time
+
+import numpy as np
+
+from repro.workloads import pareto_1k
+
+from .common import build, ds_bytes, row
+
+BATCH = 256
+ENGINES_ROW = ("scavenger", "terarkdb", "hybrid")
+
+
+def run(scale=None):
+    rows = []
+    for engine in ENGINES_ROW:
+        spec = pareto_1k(dataset_bytes=ds_bytes(8))
+        store, r = build(engine, spec)
+        r.load()
+        r.update(spec.n_keys)
+        store.drain()
+
+        rng = np.random.default_rng(123)
+        keys = r.keys.sample(rng, BATCH).astype(np.uint64)
+        t0, w0 = store.io.fg_clock_us, time.perf_counter()
+        reps = 8
+        for _ in range(reps):
+            store.multi_get(keys)
+        us = (store.io.fg_clock_us - t0) / (BATCH * reps)
+        wall = (time.perf_counter() - w0) / (BATCH * reps) * 1e6
+        rows.append(row(f"read_path/multi_get_{engine}", us, wall_us=wall))
+
+        starts = rng.integers(0, spec.n_keys, 32)
+        t0, w0 = store.io.fg_clock_us, time.perf_counter()
+        store.multi_scan(starts, 20)
+        us_sc = (store.io.fg_clock_us - t0) / 32
+        wall_sc = (time.perf_counter() - w0) / 32 * 1e6
+        rows.append(row(f"read_path/multi_scan_{engine}", us_sc,
+                        wall_us=wall_sc))
+    return rows

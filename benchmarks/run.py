@@ -16,7 +16,8 @@ MODULES = [
     "fig02_tradeoff", "fig03_gc_breakdown", "fig05_spaceamp_sources",
     "fig12_micro", "fig13_ycsb", "fig14_nolimit", "fig16_features",
     "fig17_ablation_space", "fig19_workloads", "fig20_space_limits",
-    "table1_space_overhead", "batch_api", "sharding", "kernels_bench",
+    "table1_space_overhead", "batch_api", "read_path", "sharding",
+    "kernels_bench",
     "serving_cache", "checkpoint_store", "roofline",
 ]
 

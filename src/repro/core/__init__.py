@@ -1,13 +1,19 @@
 """Scavenger core: KV-separated LSM-tree engines (paper's contribution).
 
-Five selectable engines over one deterministic substrate:
-rocksdb | blobdb | titan | terarkdb | scavenger.
+Six selectable engines over one deterministic substrate:
+rocksdb | blobdb | titan | terarkdb | scavenger | hybrid — each a pluggable
+strategy object resolved from the ``repro.core.engines`` registry (see
+DESIGN.md §7 for the layered architecture and the extension recipe).
 """
 
 from .batch import WriteBatch
 from .engine.config import EngineConfig, ENGINES
+from .engines import (EngineStrategy, available_engines, make_strategy,
+                      register_engine)
+from .oracle import LatestOracle
 from .sharding import FleetScheduler, ShardedStore
 from .store import Store
 
-__all__ = ["EngineConfig", "ENGINES", "FleetScheduler", "ShardedStore",
-           "Store", "WriteBatch"]
+__all__ = ["EngineConfig", "ENGINES", "EngineStrategy", "FleetScheduler",
+           "LatestOracle", "ShardedStore", "Store", "WriteBatch",
+           "available_engines", "make_strategy", "register_engine"]

@@ -23,13 +23,12 @@ from .engine.tables import ETYPE_REF, ETYPE_TOMB, SSTable, KIND_KEY
 def compute_targets(store):
     """RocksDB dynamic-level-bytes: data targets the bottom level; level
     targets derived from the actual last-level size; returns
-    (targets, base_level)."""
+    (targets, base_level).  Level weights come from the engine strategy
+    (compensated bytes under the paper's §III-C scoring)."""
     cfg = store.cfg
-    comp = cfg.compensated_compaction
     v = store.version
     last = cfg.max_levels - 1
-    s_last = (v.level_compensated_bytes(last) if comp
-              else v.level_bytes(last))
+    s_last = store.strategy.level_weight(v, last)
     targets = [0] * cfg.max_levels
     t = float(max(s_last, cfg.base_level_bytes))
     targets[last] = t
@@ -47,7 +46,6 @@ def level_scores(store):
     """-> list of (score, level). L0 scores by file count; others by
     (compensated) bytes / target."""
     cfg = store.cfg
-    comp = cfg.compensated_compaction
     v = store.version
     targets, base_level = compute_targets(store)
     scores = [(len(v.levels[0]) / cfg.l0_trigger, 0)]
@@ -55,7 +53,7 @@ def level_scores(store):
     for i in range(base_level, last):
         if not v.levels[i]:
             continue
-        size = (v.level_compensated_bytes(i) if comp else v.level_bytes(i))
+        size = store.strategy.level_weight(v, i)
         if targets[i] > 0:
             scores.append((size / targets[i], i))
     return scores, base_level
@@ -139,17 +137,9 @@ def run_compaction(store, level: int, base_level: int) -> None:
         # One job models a round of parallel subcompactions: move enough
         # files to bring the level back under target (cap 8 per job).
         targets, _ = compute_targets(store)
-        sz = (lambda t: t.compensated_bytes) if cfg.compensated_compaction \
-            else (lambda t: t.file_bytes)
+        sz = store.strategy.file_weight
         overshoot = sum(sz(t) for t in files) - targets[level]
-        if cfg.compensated_compaction:
-            # push the highest value-density files down first (§III-C)
-            ranked = sorted(files, key=lambda t: t.compensated_bytes
-                            / max(t.file_bytes, 1), reverse=True)
-        else:
-            cur = store.compact_cursor.get(level, 0) % len(files)
-            ranked = files[cur:] + files[:cur]
-            store.compact_cursor[level] = cur + 1
+        ranked = store.strategy.rank_compaction_inputs(store, files, level)
         ups, moved = [], 0
         for t in ranked:
             ups.append(t)
@@ -174,9 +164,8 @@ def run_compaction(store, level: int, base_level: int) -> None:
             for b in range(t.n_data_blocks):
                 store.io.rand_read(cfg.block_size, sio.CAT_COMPACT_READ)
 
-    # ---- BlobDB: compaction-triggered value relocation ----
-    if cfg.gc_scheme == "compaction":
-        kept = store.blobdb_relocate(kept)
+    # ---- engine hook: compaction-triggered relocation (BlobDB) ----
+    kept = store.strategy.on_compaction_kept(store, kept)
 
     outs = _cut_outputs(store, kept)
     for t in outs:

@@ -58,6 +58,25 @@ class BlockCache:
             self.low_bytes += nbytes
         self._evict()
 
+    def probe_records(self, fid: int, stream: str, positions, nbytes,
+                      priority: int = PRI_LOW) -> np.ndarray:
+        """Batched lookup-or-insert for per-record cache keys.
+
+        For each position (in order): a resident record counts a hit and
+        is touched; a missing one is inserted at ``priority`` — exactly the
+        get-then-put-on-miss sequence of the scalar path, so LRU state and
+        hit/miss counters stay byte-identical.  Returns the hit mask."""
+        hits = np.empty(len(positions), bool)
+        for i, (p, nb) in enumerate(zip(np.asarray(positions).tolist(),
+                                        np.asarray(nbytes).tolist())):
+            ck = (fid, stream, p)
+            if self.get(ck):
+                hits[i] = True
+            else:
+                hits[i] = False
+                self.put(ck, int(nb), priority)
+        return hits
+
     def erase(self, key) -> None:
         if key in self._high:
             self.high_bytes -= self._high.pop(key)

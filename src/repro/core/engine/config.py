@@ -18,8 +18,11 @@ from __future__ import annotations
 
 import dataclasses
 
-
-ENGINES = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger")
+# Canonical built-in engine list (the five paper engines + hybrid).  The
+# source of truth is the strategy registry (``repro.core.engines``) — this
+# tuple exists so callers can enumerate engines without importing it;
+# ``tests/test_engines_registry.py`` asserts the two stay in sync.
+ENGINES = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger", "hybrid")
 
 
 @dataclasses.dataclass
@@ -53,8 +56,14 @@ class EngineConfig:
     cache_high_frac: float = 0.5
     dropcache_keys: int = 4096
 
+    # ---- write pressure ----
+    max_immutables: int = 2         # immutable memtables before write stall
+    delayed_write_rate: float = 16.0   # MB/s, RocksDB default under slowdown
+
     # ---- KV separation & GC ----
     sep_threshold: int = 512
+    hybrid_large_threshold: int = 8 << 10   # hybrid engine: always-separate
+    gc_scheme: str | None = None    # None -> engine default (validated)
     gc_garbage_ratio: float = 0.2
     gc_aggressive_ratio: float = 0.05
     gc_batch_files: int = 4         # max candidate vSSTs merged per GC run
@@ -80,33 +89,24 @@ class EngineConfig:
     hotcold_write: bool | None = None            # W: DropCache routing
 
     def __post_init__(self):
-        if self.engine not in ENGINES:
-            raise ValueError(f"unknown engine {self.engine!r}")
-        scav = self.engine == "scavenger"
-        if self.compensated_compaction is None:
-            self.compensated_compaction = scav
-        if self.lazy_read is None:
-            self.lazy_read = scav
-        if self.index_decoupled is None:
-            self.index_decoupled = scav
-        if self.hotcold_write is None:
-            self.hotcold_write = scav
+        # lazy import: the strategy modules import table/IO substrate, which
+        # imports this module — resolving at construction breaks the cycle
+        from ..engines import get_strategy_class
+        strat = get_strategy_class(self.engine)   # raises on unknown engine
+        self.kv_separated = strat.kv_separated
+        if self.gc_scheme is None:
+            self.gc_scheme = strat.gc_schemes[0]
+        elif self.gc_scheme not in strat.gc_schemes:
+            raise ValueError(
+                f"engine {self.engine!r} does not support gc_scheme "
+                f"{self.gc_scheme!r} (supported: "
+                f"{', '.join(strat.gc_schemes)})")
+        for flag in ("compensated_compaction", "lazy_read",
+                     "index_decoupled", "hotcold_write"):
+            if getattr(self, flag) is None:
+                setattr(self, flag, getattr(strat, flag))
 
     # ------------------------------------------------------------ properties
-    @property
-    def kv_separated(self) -> bool:
-        return self.engine != "rocksdb"
-
-    @property
-    def gc_scheme(self) -> str:
-        return {
-            "rocksdb": "none",
-            "blobdb": "compaction",     # compaction-triggered relocation
-            "titan": "writeback",       # GC rewrites index (Write-Index)
-            "terarkdb": "inherit",      # file-number inheritance, no writeback
-            "scavenger": "inherit",
-        }[self.engine]
-
     @property
     def vsst_layout(self) -> str:
         return "rtable" if self.lazy_read else "btable"

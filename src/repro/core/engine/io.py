@@ -147,8 +147,13 @@ class SimIO:
         return self._advance(self.device.seq_write_us(nbytes, self.lane),
                              cat)
 
-    def cache_hit(self, cat: str) -> float:
-        return self._advance(self.device.cache_hit_us, cat)
+    def cache_hit(self, cat: str, n: int = 1) -> float:
+        t = 0.0
+        # n separate advances (not one multiply): keeps the float clock
+        # bit-identical whether hits are charged one by one or batched
+        for _ in range(n):
+            t += self._advance(self.device.cache_hit_us, cat)
+        return t
 
     def stall(self, us: float, cat: str = "throttle") -> None:
         self._advance(us, cat)

@@ -48,13 +48,18 @@ class BloomFilter:
 
     __slots__ = ("nbits", "k", "bits", "nbytes")
 
+    @staticmethod
+    def k_for(bits_per_key: int) -> int:
+        """Number of hash probes for a given bits/key (ln2 * bits/key)."""
+        return max(1, int(round(bits_per_key * 0.69)))
+
     def __init__(self, keys: np.ndarray, bits_per_key: int = 10):
         n = max(1, len(keys))
         self.nbits = int(max(64, n * bits_per_key))
         # round up to u64 words
         nwords = (self.nbits + 63) // 64
         self.nbits = nwords * 64
-        self.k = max(1, int(round(bits_per_key * 0.69)))  # ln2 * bits/key
+        self.k = self.k_for(bits_per_key)
         self.bits = np.zeros(nwords, dtype=np.uint64)
         self.nbytes = nwords * 8
         if len(keys):
@@ -63,10 +68,18 @@ class BloomFilter:
             bit = (hs & np.uint64(63)).ravel()
             np.bitwise_or.at(self.bits, word, np.uint64(1) << bit)
 
-    def may_contain(self, keys: np.ndarray) -> np.ndarray:
-        """Vectorized membership test -> bool array."""
-        keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
-        hs = hash_family(keys, self.k) % np.uint64(self.nbits)
+    def may_contain(self, keys: np.ndarray,
+                    raw: np.ndarray | None = None) -> np.ndarray:
+        """Vectorized membership test -> bool array.
+
+        ``raw`` may carry precomputed ``hash_family(keys, k)`` output (pre-
+        modulo): the raw hashes depend only on the keys, so a batched lookup
+        walking many tables hashes its key column once and reuses it against
+        every filter of the same ``k``."""
+        if raw is None or len(raw) != self.k:
+            keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+            raw = hash_family(keys, self.k)
+        hs = raw % np.uint64(self.nbits)
         word = hs >> np.uint64(6)
         bit = hs & np.uint64(63)
         hit = (self.bits[word] >> bit) & np.uint64(1)

@@ -3,6 +3,12 @@
 Entries are (seq, etype, vid, vsize, vfile).  Normal user puts are INLINE
 (the memtable holds the full value until flush decides separation); Titan's
 GC Write-Index puts REF entries pointing at an existing blob file.
+
+Reads go through a cached *columnar snapshot* (key-sorted parallel arrays,
+rebuilt lazily after a write): ``get_batch`` probes a whole key column with
+one ``searchsorted``, and scans slice key ranges out of the same arrays —
+no per-key Python in the batched read path.  Immutable memtables never
+rebuild; the active memtable rebuilds at most once per write batch.
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ class Memtable:
         # key -> (seq, etype, vid, vsize, vfile)
         self.entries: dict[int, tuple] = {}
         self.bytes = 0
+        self._snap: tuple | None = None     # cached columnar snapshot
 
     def _entry_bytes(self, etype: int, vsize: int) -> int:
         if etype == ETYPE_TOMB:
@@ -33,6 +40,7 @@ class Memtable:
             self.bytes -= self._entry_bytes(prev[1], prev[3])
         self.entries[key] = entry
         self.bytes += self._entry_bytes(entry[1], entry[3])
+        self._snap = None
 
     def put(self, key: int, seq: int, vid: int, vsize: int) -> None:
         self._set(key, (seq, ETYPE_INLINE, vid, vsize, -1))
@@ -46,6 +54,42 @@ class Memtable:
 
     def get(self, key: int):
         return self.entries.get(key)
+
+    def snapshot(self) -> tuple:
+        """Key-sorted columnar view: (keys, seqs, etype, vids, vsizes,
+        vfiles) parallel arrays, cached until the next write."""
+        if self._snap is None:
+            n = len(self.entries)
+            keys = np.fromiter(self.entries.keys(), np.uint64, count=n)
+            order = np.argsort(keys, kind="stable")
+            vals = list(self.entries.values())
+            self._snap = (
+                keys[order],
+                np.fromiter((v[0] for v in vals), np.uint64, count=n)[order],
+                np.fromiter((v[1] for v in vals), np.uint8, count=n)[order],
+                np.fromiter((v[2] for v in vals), np.uint64, count=n)[order],
+                np.fromiter((v[3] for v in vals), np.int64, count=n)[order],
+                np.fromiter((v[4] for v in vals), np.int64, count=n)[order],
+            )
+        return self._snap
+
+    def get_batch(self, keys: np.ndarray) -> tuple:
+        """Vectorized point probe for a key column.
+
+        Returns (found, seqs, etype, vids, vsizes, vfiles) parallel arrays
+        aligned with ``keys``; rows where ``found`` is False hold the
+        safe-gather placeholder and must be masked by the caller."""
+        mk, seqs, ety, vids, vsz, vf = self.snapshot()
+        nq = len(keys)
+        if len(mk) == 0:
+            return (np.zeros(nq, bool), np.zeros(nq, np.uint64),
+                    np.zeros(nq, np.uint8), np.zeros(nq, np.uint64),
+                    np.zeros(nq, np.int64), np.zeros(nq, np.int64))
+        pos = np.searchsorted(mk, keys)
+        ok = pos < len(mk)
+        safe = np.where(ok, pos, 0)
+        ok &= mk[safe] == keys
+        return (ok, seqs[safe], ety[safe], vids[safe], vsz[safe], vf[safe])
 
     def entry_bytes_batch(self, ety: np.ndarray, vsizes: np.ndarray
                           ) -> np.ndarray:
@@ -86,6 +130,7 @@ class Memtable:
             consumed += 1
             if self.bytes >= cap:
                 break
+        self._snap = None
         return consumed
 
     @property
@@ -97,14 +142,4 @@ class Memtable:
 
     def sorted_arrays(self):
         """-> (keys, seqs, etype, vids, vsizes, vfiles) sorted by key."""
-        n = len(self.entries)
-        keys = np.fromiter(self.entries.keys(), np.uint64, count=n)
-        order = np.argsort(keys, kind="stable")
-        keys = keys[order]
-        vals = list(self.entries.values())
-        seqs = np.fromiter((v[0] for v in vals), np.uint64, count=n)[order]
-        ety = np.fromiter((v[1] for v in vals), np.uint8, count=n)[order]
-        vids = np.fromiter((v[2] for v in vals), np.uint64, count=n)[order]
-        vsz = np.fromiter((v[3] for v in vals), np.int64, count=n)[order]
-        vf = np.fromiter((v[4] for v in vals), np.int64, count=n)[order]
-        return keys, seqs, ety, vids, vsz, vf
+        return self.snapshot()

@@ -1,7 +1,12 @@
-"""Garbage collection schemes (paper §II-C, §III-B).
+"""Garbage collection orchestration (paper §II-C, §III-B).
 
-  * inherit (TerarkDB / Scavenger): no index writeback; GC output files
-    inherit from the candidates they merged; reads resolve via the chain.
+``run_gc`` is the scheme-agnostic skeleton — read candidates, GC-Lookup,
+validity, lazy value read, write, retire — with every scheme-specific step
+delegated to the store's engine strategy (``repro.core.engines``):
+
+  * inherit (TerarkDB / Scavenger / hybrid): no index writeback; GC output
+    files inherit from the candidates they merged; reads resolve via the
+    chain (``repro.core.values.resolve``).
       - TerarkDB read step: full vSST scan through the block cache.
       - Scavenger read step ("lazy read", §III-B.1): RTable dense-index
         blocks only, then — after GC-Lookup — only the *valid* records,
@@ -13,8 +18,9 @@
     through the foreground path (Write-Index) — extra WAL/memtable/compaction
     load, the paper's ~38% GC-latency step.
   * compaction (BlobDB): no standalone GC — relocation happens inside
-    compaction (see ``Store.blobdb_relocate``); blob files are reclaimed only
-    once every reference has been rewritten or dropped.
+    compaction (``engines/paper.py:BlobDBEngine.on_compaction_kept``); blob
+    files are reclaimed only once every reference has been rewritten or
+    dropped.
 """
 
 from __future__ import annotations
@@ -22,87 +28,9 @@ from __future__ import annotations
 import numpy as np
 
 from .engine import io as sio
-from .engine.cache import BlockCache
 from .engine.tables import ETYPE_REF, SSTable
-
-
-class GCGroup:
-    """Inheritance target: the set of output files of one GC run."""
-
-    __slots__ = ("files",)
-
-    def __init__(self, files: list[SSTable]):
-        self.files = files
-
-    def locate_batch(self, keys: np.ndarray, vids: np.ndarray) -> np.ndarray:
-        """Vectorized locate: fid of the group file holding each (key, vid),
-        -1 where no file does.  One ``find`` per file for the whole column
-        (files win in list order, matching the scalar walk)."""
-        keys = np.asarray(keys, np.uint64)
-        vids = np.asarray(vids, np.uint64)
-        out = np.full(len(keys), -1, np.int64)
-        unresolved = np.ones(len(keys), bool)
-        for t in self.files:
-            if not unresolved.any():
-                break
-            rows = np.nonzero(unresolved)[0]
-            pos = t.find(keys[rows])
-            ok = pos >= 0
-            safe = np.where(ok, pos, 0)
-            ok &= t.vids[safe] == vids[rows]
-            hit = rows[ok]
-            out[hit] = t.fid
-            unresolved[hit] = False
-        return out
-
-    def locate(self, key: int, vid: int) -> SSTable | None:
-        fid = int(self.locate_batch(np.array([key], np.uint64),
-                                    np.array([vid], np.uint64))[0])
-        if fid < 0:
-            return None
-        for t in self.files:
-            if t.fid == fid:
-                return t
-        return None
-
-
-def resolve_value_fids(store, vfiles: np.ndarray, keys: np.ndarray,
-                       vids: np.ndarray) -> np.ndarray:
-    """Vectorized ``Store.resolve_value_file``: follow inheritance chains
-    for a whole locator column, one grouped ``locate_batch`` per chain hop
-    instead of a Python per-record walk.  Returns the live fid per row, -1
-    where the record was already dropped by a GC."""
-    cur = np.asarray(vfiles, np.int64).copy()
-    keys = np.asarray(keys, np.uint64)
-    vids = np.asarray(vids, np.uint64)
-    n = len(cur)
-    out = np.full(n, -1, np.int64)
-    active = np.ones(n, bool)
-    # live-set snapshot is safe: resolution is pure metadata, no file is
-    # added or retired while chains are walked
-    live = store.version.value_files
-    live_fids = np.fromiter(live.keys(), np.int64, count=len(live))
-    for _ in range(10_000):
-        rows = np.nonzero(active)[0]
-        if len(rows) == 0:
-            return out
-        at_live = np.isin(cur[rows], live_fids)
-        out[rows[at_live]] = cur[rows[at_live]]
-        active[rows[at_live]] = False
-        rows = rows[~at_live]
-        if len(rows) == 0:
-            return out
-        for f in np.unique(cur[rows]).tolist():
-            grp = rows[cur[rows] == f]
-            g = store.chains.get(int(f))
-            if g is None:
-                active[grp] = False         # file gone, no inheritor
-                continue
-            nxt = g.locate_batch(keys[grp], vids[grp])
-            dead = nxt < 0
-            active[grp[dead]] = False       # dropped during that GC
-            cur[grp[~dead]] = nxt[~dead]
-    raise RuntimeError("inheritance chain cycle")
+# Re-exported for compatibility: chain machinery lives in the values layer.
+from .values.resolve import GCGroup, resolve_value_fids   # noqa: F401
 
 
 def gc_candidates(store, threshold: float) -> list[SSTable]:
@@ -126,83 +54,34 @@ def gc_batch(store, cands: list[SSTable]) -> list[SSTable]:
 
 
 def has_pending(store, threshold: float) -> bool:
-    if store.cfg.gc_scheme in ("none", "compaction"):
+    if not store.strategy.wants_standalone_gc():
         return False
     return bool(gc_candidates(store, threshold))
 
 
 def run_gc(store, candidates: list[SSTable]) -> None:
-    cfg = store.cfg
-    io = store.io
+    strat = store.strategy
     store.in_gc = True
     try:
         # ---------------------------------------------------- 1. Read phase
         for t in candidates:
-            if cfg.lazy_read and t.layout == "rtable":
-                # Lazy read: dense-index blocks only (§III-B.1).
-                for b in range(t.n_index_blocks):
-                    store.read_block(t, "ib", b, sio.CAT_GC_READ,
-                                     BlockCache.PRI_HIGH,
-                                     t.index_block_bytes())
-            elif cfg.gc_scheme == "writeback":
-                # Titan: direct (uncached) full-file scan.
-                if cfg.readahead_gc:
-                    io.seq_read(t.data_bytes, sio.CAT_GC_READ)
-                else:
-                    for b in range(t.n_data_blocks):
-                        io.rand_read(t.data_block_bytes(0, b),
-                                     sio.CAT_GC_READ)
-            else:
-                # TerarkDB: full scan through the block cache.
-                if cfg.readahead_gc:
-                    io.seq_read(t.data_bytes, sio.CAT_GC_READ)
-                else:
-                    for b in range(t.n_data_blocks):
-                        store.read_block(t, "d0", b, sio.CAT_GC_READ,
-                                         BlockCache.PRI_LOW)
+            strat.gc_read_candidate(store, t)
 
         # ------------------------------------------------ 2. GC-Lookup phase
         all_keys = np.concatenate([t.keys for t in candidates])
         all_vids = np.concatenate([t.vids for t in candidates])
         all_vsz = np.concatenate([t.vsizes for t in candidates])
-        all_rec = np.concatenate([t.rec_bytes for t in candidates])
         cand_of = np.concatenate([np.full(t.n, i, np.int64)
                                   for i, t in enumerate(candidates)])
         res = store.lookup_entries(all_keys, sio.CAT_GC_LOOKUP)
 
         valid = res["found"] & (res["etype"] == ETYPE_REF) & \
             (res["vid"] == all_vids)
-        if cfg.gc_scheme == "inherit":
-            # resolve the entry's file number through inheritance chains and
-            # compare with the candidate being collected (§II-B).  Fast path:
-            # the entry usually points directly at the (live) candidate; the
-            # rest resolve in one grouped vectorized pass.
-            cand_fids = np.array([t.fid for t in candidates], np.int64)
-            direct = res["vfile"] == cand_fids[cand_of]
-            chained = np.nonzero(valid & ~direct)[0]
-            if len(chained):
-                heads = resolve_value_fids(store, res["vfile"][chained],
-                                           all_keys[chained],
-                                           all_vids[chained])
-                valid[chained] &= heads == cand_fids[cand_of[chained]]
-        else:  # writeback: exact locator match
-            cand_fids = np.array([t.fid for t in candidates], np.int64)
-            valid &= res["vfile"] == cand_fids[cand_of]
+        valid = strat.gc_refine_valid(store, candidates, cand_of, res,
+                                      all_keys, all_vids, valid)
 
         # ------------------------------------- 3. lazy value read (Scavenger)
-        if cfg.lazy_read:
-            for ci, t in enumerate(candidates):
-                pos = np.nonzero(valid & (cand_of == ci))[0]
-                if len(pos) == 0:
-                    continue
-                local = pos - int(np.searchsorted(cand_of, ci, side="left"))
-                runs = np.split(local, np.nonzero(np.diff(local) != 1)[0] + 1)
-                for r in runs:
-                    nbytes = int(t.rec_bytes[r].sum())
-                    if cfg.readahead_gc:
-                        io.seq_read(nbytes, sio.CAT_GC_READ)
-                    else:
-                        io.rand_read(nbytes, sio.CAT_GC_READ)
+        strat.gc_value_read(store, candidates, cand_of, valid)
 
         # ---------------------------------------------------- 4. Write phase
         vkeys = all_keys[valid]
@@ -214,17 +93,8 @@ def run_gc(store, candidates: list[SSTable]) -> None:
             vkeys, vvids, vvsz, sio.CAT_GC_WRITE)
 
         # --------------------------------- 5. retire candidates / writeback
-        if cfg.gc_scheme == "inherit":
-            group = GCGroup(new_files)
-            for t in candidates:
-                store.version.retire_value_file(t.fid, None)
-                store.chains[t.fid] = group
-                store.cache.erase_file(t.fid)
-        else:  # titan writeback: index rewrites as one batched write
-            store.writeback_index_batch(vkeys, vvids, vvsz, new_fid_per_rec)
-            for t in candidates:
-                store.version.retire_value_file(t.fid, None)
-                store.cache.erase_file(t.fid)
+        strat.gc_finalize(store, candidates, new_files, vkeys, vvids, vvsz,
+                          new_fid_per_rec)
 
         store.n_gc_runs += 1
         store.gc_reclaimed_bytes += sum(t.file_bytes for t in candidates) \

@@ -129,7 +129,7 @@ class FleetScheduler:
         return best
 
     def _shard_gc_candidates(self, shard, aggressive: bool | None = None):
-        if shard.cfg.gc_scheme not in ("inherit", "writeback"):
+        if not shard.strategy.wants_standalone_gc():
             return None
         if shard.in_batch_write:
             # same fence as Store.next_gc_job: GC must not interleave with a

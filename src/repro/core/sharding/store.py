@@ -261,11 +261,8 @@ class ShardedStore(ScalarOps):
 
     def flush(self) -> None:
         """Force-rotate every shard's memtable, then drain the fleet."""
-        from ..engine.memtable import Memtable
         for s in self.shards:
-            if len(s.memtable):
-                s.immutables.append(s.memtable)
-                s.memtable = Memtable(s.cfg)
+            s.rotate_memtable()
         self.fleet.drain()
 
     # ================================================================ stats

@@ -1,8 +1,18 @@
-"""KVStore facade: five selectable engines over one substrate.
+"""KVStore facade: six selectable engines over one layered substrate.
 
 ``Store(EngineConfig(engine=...))`` gives RocksDB-, BlobDB-, Titan-,
-TerarkDB- or Scavenger-semantics over the same deterministic simulated
-device, so every paper comparison is apples-to-apples.
+TerarkDB-, Scavenger- or hybrid-semantics over the same deterministic
+simulated device, so every paper comparison is apples-to-apples.
+
+The facade owns scheduling and the write path; everything else is layered
+(DESIGN.md §7):
+
+  * ``read/``    — vectorized point lookups + scan merge planning
+  * ``values/``  — vSST build, coalesced fetch planning, inheritance-chain
+                   resolution, garbage exposure
+  * ``engines/`` — one pluggable strategy object per engine (flush
+                   separation, GC scheme, relocation/writeback hooks,
+                   compaction scoring), resolved from a registry
 
 Scheduling model (see DESIGN.md §3): user operations advance the foreground
 lane; flush/compaction/GC jobs run on a sequential background lane that
@@ -28,24 +38,31 @@ from .engine.cache import BlockCache, DropCache
 from .engine.config import EngineConfig
 from .engine.io import SimIO
 from .engine.memtable import Memtable
-from .engine.tables import (ETYPE_INLINE, ETYPE_REF, ETYPE_TOMB, SSTable,
-                            build_vsst)
+from .engine.tables import ETYPE_INLINE, ETYPE_REF, ETYPE_TOMB, SSTable
 from .engine.version import Version
+from .engines import make_strategy
+from .oracle import LatestOracle
+from .read import lookup as rlookup
+from .read import scan as rscan
+from .values import build as vbuild
+from .values import fetch as vfetch
+from .values import garbage as vgarbage
+from .values import resolve as vresolve
 
-MAX_IMMUTABLES = 2
-DELAYED_WRITE_RATE = 16.0   # MB/s, RocksDB default under slowdown
+__all__ = ["Store"]
 
 
 class Store(ScalarOps):
     def __init__(self, cfg: EngineConfig, io: SimIO | None = None):
         self.cfg = cfg
+        self.strategy = make_strategy(cfg)
         self.io = io or SimIO()
         self.cache = BlockCache(cfg.cache_bytes, cfg.cache_high_frac)
         self.dropcache = DropCache(cfg.dropcache_keys)
         self.version = Version(cfg.max_levels)
         self.memtable = Memtable(cfg)
         self.immutables: list[Memtable] = []
-        self.chains: dict[int, gcmod.GCGroup] = {}
+        self.chains: dict[int, vresolve.GCGroup] = {}
         self.seq = 0
         self.next_vid = 1
         self.in_gc = False
@@ -58,14 +75,18 @@ class Store(ScalarOps):
         self.scheduler = None
 
         # stats / bookkeeping
-        self.latest: dict[int, tuple] = {}   # key -> (vid, vsize): oracle for
-        self.valid_bytes = 0                 # space-amp denominators only
+        self.latest = LatestOracle()         # measurement-only oracle for
+        #                                      space-amp denominators
         self.user_write_bytes = 0
         self.n_user_ops = 0
         self.n_compactions = 0
         self.n_gc_runs = 0
         self.gc_reclaimed_bytes = 0
         self.stall_us = 0.0
+
+    @property
+    def valid_bytes(self) -> int:
+        return self.latest.valid_bytes
 
     # ================================================================== API
     # The public API is batched and columnar (write / multi_get /
@@ -119,27 +140,11 @@ class Store(ScalarOps):
                     self.memtable = Memtable(cfg)
                     self.pump()
                     self._stall_while(
-                        lambda: len(self.immutables) > MAX_IMMUTABLES)
+                        lambda: len(self.immutables) > cfg.max_immutables)
         finally:
             self.in_batch_write = False
 
-        # stats oracle: the last record per key wins (batch order = seq
-        # order); intermediate updates cancel out of valid_bytes exactly as
-        # they would applied one by one
-        last: dict[int, int] = {}
-        for j, k in enumerate(keys.tolist()):
-            last[k] = j
-        for k, j in last.items():
-            if is_put[j]:
-                prev = self.latest.get(k)
-                if prev is not None:
-                    self.valid_bytes -= prev[1]
-                self.latest[k] = (int(vids_out[j]), int(vsz[j]))
-                self.valid_bytes += int(vsz[j])
-            else:
-                prev = self.latest.pop(k, None)
-                if prev is not None:
-                    self.valid_bytes -= prev[1]
+        self.latest.apply_batch(is_put, keys, vids_out, vsz)
         self._after_write(total)
         return vids_out
 
@@ -183,93 +188,9 @@ class Store(ScalarOps):
         out = []
         with self.io.batched(len(starts)):
             for s, c in zip(starts.tolist(), counts.tolist()):
-                out.append(self._scan_retry(int(s), int(c)))
+                out.append(rscan.scan_retry(self, int(s), int(c)))
         self.pump()
         return out
-
-    def _scan_retry(self, start_key: int, count: int):
-        """Per-source fetch limits adapt upward: dead entries (tombstones,
-        superseded versions) may eat slots, requiring a refill."""
-        limit = count
-        for _ in range(32):
-            out, min_excluded = self._scan_once(start_key, count, limit)
-            complete = min_excluded is None or (
-                len(out) >= count and out[-1][0] < min_excluded)
-            if complete:
-                return out
-            limit *= 4
-        return out
-
-    def _scan_once(self, start_key: int, count: int, limit: int):
-        cfg = self.cfg
-        excluded = []       # first key beyond each truncated source
-        pools = []
-        for mt in [self.memtable] + self.immutables:
-            mk = sorted(k for k in mt.entries if k >= start_key)
-            if len(mk) > limit:
-                excluded.append(mk[limit])
-            mk = mk[:limit]
-            if not mk:
-                continue
-            rows = [mt.entries[k] for k in mk]
-            pools.append((None,
-                          np.array(mk, np.uint64),
-                          np.array([r[0] for r in rows], np.uint64),
-                          np.array([r[1] for r in rows], np.uint8),
-                          np.array([r[2] for r in rows], np.uint64),
-                          np.array([r[3] for r in rows], np.int64),
-                          np.array([r[4] for r in rows], np.int64),
-                          None))
-        for lvl in range(cfg.max_levels):
-            for t in self.version.levels[lvl]:
-                a = int(np.searchsorted(t.keys, np.uint64(start_key)))
-                b = min(a + limit, t.n)
-                if a + limit < t.n:
-                    excluded.append(int(t.keys[a + limit]))
-                if a >= b:
-                    continue
-                pos = np.arange(a, b, dtype=np.int64)
-                pools.append((t, t.keys[pos], t.seqs[pos], t.etype[pos],
-                              t.vids[pos], t.vsizes[pos], t.vfiles[pos], pos))
-        min_excluded = min(excluded) if excluded else None
-        if not pools:
-            return [], min_excluded
-        keys = np.concatenate([p[1] for p in pools])
-        seqs = np.concatenate([p[2] for p in pools])
-        ety = np.concatenate([p[3] for p in pools])
-        vids = np.concatenate([p[4] for p in pools])
-        vsz = np.concatenate([p[5] for p in pools])
-        vf = np.concatenate([p[6] for p in pools])
-        src = np.concatenate([np.full(len(p[1]), i, np.int64)
-                              for i, p in enumerate(pools)])
-        pos_all = np.concatenate([
-            p[7] if p[7] is not None else np.full(len(p[1]), -1, np.int64)
-            for p in pools])
-        order = np.lexsort((np.iinfo(np.uint64).max - seqs, keys))
-        keys, ety, vids, vsz, vf, src, pos_all = (
-            a[order] for a in (keys, ety, vids, vsz, vf, src, pos_all))
-        first = np.ones(len(keys), bool)
-        first[1:] = keys[1:] != keys[:-1]
-        live = first & (ety != ETYPE_TOMB)
-        take = np.nonzero(live)[0][:count]
-
-        # ---- I/O: data blocks for chosen rows, value fetches for refs ----
-        for i_pool in np.unique(src[take]):
-            p = pools[i_pool]
-            if p[0] is None:
-                continue
-            t = p[0]
-            rows = take[src[take] == i_pool]
-            self._read_entry_blocks(t, pos_all[rows], ety[rows],
-                                    sio.CAT_SCAN)
-        ref_rows = take[ety[take] == ETYPE_REF]
-        if len(ref_rows):
-            self._read_values_batch(keys[ref_rows], vids[ref_rows],
-                                    vf[ref_rows], vsz[ref_rows],
-                                    sio.CAT_SCAN)
-        self.pump()
-        return (list(zip(keys[take].tolist(), vids[take].tolist())),
-                min_excluded)
 
     # ===================================================== background lanes
     def next_compact_job(self):
@@ -285,7 +206,7 @@ class Store(ScalarOps):
         """Work-finder for the dedicated GC pool (1-2 threads — Titan/
         TerarkDB defaults; GC lags ingest, which is the source of the
         paper's space-amplification backlog)."""
-        if self.cfg.gc_scheme not in ("inherit", "writeback"):
+        if not self.strategy.wants_standalone_gc():
             return None
         if self.in_batch_write:
             # A WriteBatch applies atomically over one preassigned seq
@@ -368,15 +289,16 @@ class Store(ScalarOps):
 
     # ------------------------------------------------------ write pressure
     def _after_write(self, rec_bytes: int) -> None:
+        cfg = self.cfg
         if self.memtable.full:
             self.immutables.append(self.memtable)
-            self.memtable = Memtable(self.cfg)
+            self.memtable = Memtable(cfg)
         self.pump()
-        self._stall_while(lambda: len(self.immutables) > MAX_IMMUTABLES)
+        self._stall_while(lambda: len(self.immutables) > cfg.max_immutables)
         self._stall_while(
-            lambda: len(self.version.levels[0]) >= self.cfg.l0_stop)
-        if len(self.version.levels[0]) >= self.cfg.l0_slowdown:
-            delay = rec_bytes / DELAYED_WRITE_RATE   # us at MB/s
+            lambda: len(self.version.levels[0]) >= cfg.l0_stop)
+        if len(self.version.levels[0]) >= cfg.l0_slowdown:
+            delay = rec_bytes / cfg.delayed_write_rate   # us at MB/s
             self.io.stall(delay)
             self.stall_us += delay
             self.pump()
@@ -421,307 +343,66 @@ class Store(ScalarOps):
         mt = self.immutables.pop(0)
         cfg = self.cfg
         keys, seqs, ety, vids, vsz, vf = mt.sorted_arrays()
-        if cfg.kv_separated:
-            sep = (ety == ETYPE_INLINE) & (vsz >= cfg.sep_threshold)
-            if sep.any():
-                idx = np.nonzero(sep)[0]
-                _, fids = self.build_value_files(keys[idx], vids[idx],
-                                                 vsz[idx], sio.CAT_FLUSH)
-                ety = ety.copy()
-                vf = vf.copy()
-                ety[idx] = ETYPE_REF
-                vf[idx] = fids
+        sep = self.strategy.separation_mask(self, keys, ety, vsz)
+        if sep is not None and sep.any():
+            idx = np.nonzero(sep)[0]
+            _, fids = self.build_value_files(keys[idx], vids[idx],
+                                             vsz[idx], sio.CAT_FLUSH)
+            ety = ety.copy()
+            vf = vf.copy()
+            ety[idx] = ETYPE_REF
+            vf[idx] = fids
         t = SSTable(cfg, "k", cfg.ksst_layout, keys, seqs, ety, vids, vsz, vf)
         t.compensated_extra = int(vsz[ety == ETYPE_REF].sum())
         self.io.seq_write(t.file_bytes, sio.CAT_FLUSH)
         self.version.add_l0(t)
 
-    def flush(self) -> None:
-        """Force-rotate the memtable and drain all background work."""
+    def rotate_memtable(self) -> None:
+        """Force the active memtable immutable (no background work)."""
         if len(self.memtable):
             self.immutables.append(self.memtable)
             self.memtable = Memtable(self.cfg)
+
+    def flush(self) -> None:
+        """Force-rotate the memtable and drain all background work."""
+        self.rotate_memtable()
         self.drain()
 
     # ======================================================= lookup machinery
     def lookup_entries(self, keys: np.ndarray, cat: str) -> dict:
-        """Vectorized newest-wins point lookup for a batch of keys.
-
-        Walks memtables -> L0 (newest first) -> L1..Ln with bloom filters and
-        block-cache I/O accounting.  Returns parallel arrays."""
-        n = len(keys)
-        out = {
-            "found": np.zeros(n, bool),
-            "etype": np.full(n, 255, np.uint8),
-            "vid": np.zeros(n, np.uint64),
-            "vsize": np.zeros(n, np.int64),
-            "vfile": np.full(n, -1, np.int64),
-        }
-        unresolved = np.ones(n, bool)
-        tables = [self.memtable] + list(reversed(self.immutables))
-        for i, k in enumerate(keys.tolist()):
-            for mt in tables:
-                e = mt.get(k)
-                if e is not None:
-                    out["found"][i] = True
-                    out["etype"][i] = e[1]
-                    out["vid"][i] = e[2]
-                    out["vsize"][i] = e[3]
-                    out["vfile"][i] = e[4]
-                    unresolved[i] = False
-                    break
-
-        def probe_file(t: SSTable, rows: np.ndarray):
-            may = t.bloom.may_contain(keys[rows])
-            if not may.any():
-                return
-            rows = rows[may]
-            self.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
-                            t.index_block_bytes())
-            pos = t.find(keys[rows])
-            hit = pos >= 0
-            if hit.any():
-                hrows, hpos = rows[hit], pos[hit]
-                self._read_entry_blocks(t, hpos, t.etype[hpos], cat)
-                out["found"][hrows] = True
-                out["etype"][hrows] = t.etype[hpos]
-                out["vid"][hrows] = t.vids[hpos]
-                out["vsize"][hrows] = t.vsizes[hpos]
-                out["vfile"][hrows] = t.vfiles[hpos]
-                unresolved[hrows] = False
-
-        for t in reversed(self.version.levels[0]):
-            if not unresolved.any():
-                break
-            probe_file(t, np.nonzero(unresolved)[0])
-        for lvl in range(1, self.cfg.max_levels):
-            if not unresolved.any():
-                break
-            files = self.version.levels[lvl]
-            if not files:
-                continue
-            rows = np.nonzero(unresolved)[0]
-            fidx = self.version.assign_files(lvl, keys[rows])
-            for fi in np.unique(fidx[fidx >= 0]):
-                probe_file(files[fi], rows[fidx == fi])
-        return out
+        """Vectorized newest-wins point lookup (read layer)."""
+        return rlookup.lookup_entries(self, keys, cat)
 
     def _read_entry_blocks(self, t: SSTable, pos: np.ndarray,
                            ety: np.ndarray, cat: str) -> None:
-        """Charge data-block reads for entries at ``pos`` in kSST/vSST ``t``.
-
-        DTable routes REF entries to (high-priority) KF blocks and inline
-        records to KV blocks — the paper's GC-Lookup optimisation."""
-        if t.layout == "dtable":
-            streams = np.where(ety == ETYPE_REF, 0, 1)
-            for s, b in {(int(s), int(t.block_of[p]))
-                         for s, p in zip(streams, pos)}:
-                pri = BlockCache.PRI_HIGH if s == 0 else BlockCache.PRI_LOW
-                self.read_block(t, f"d{s}", b, cat, pri,
-                                t.data_block_bytes(s, b))
-        else:
-            for b in np.unique(t.block_of[pos]).tolist():
-                self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW,
-                                t.data_block_bytes(0, b))
+        rlookup.read_entry_blocks(self, t, pos, ety, cat)
 
     def read_block(self, t: SSTable, stream: str, block_id: int, cat: str,
                    priority: int, nbytes: int | None = None) -> None:
-        ck = (t.fid, stream, int(block_id))
-        if self.cache.get(ck):
-            self.io.cache_hit(cat)
-            return
-        if nbytes is None:
-            s = int(stream[1])
-            nbytes = t.data_block_bytes(s, block_id)
-        self.io.rand_read(int(nbytes), cat)
-        self.cache.put(ck, int(nbytes), priority)
+        rlookup.read_block(self, t, stream, block_id, cat, priority, nbytes)
 
     # ========================================================== value store
     def resolve_value_file(self, fid: int, key: int,
                            vid: int) -> SSTable | None:
         """Follow GC inheritance chains to the live file holding (key, vid)."""
-        guard = 0
-        while True:
-            t = self.version.value_files.get(fid)
-            if t is not None:
-                return t
-            g = self.chains.get(fid)
-            if g is None:
-                return None
-            nt = g.locate(key, vid)
-            if nt is None:
-                return None
-            fid = nt.fid
-            guard += 1
-            if guard > 10_000:
-                raise RuntimeError("inheritance chain cycle")
+        return vresolve.resolve_value_file(self, fid, key, vid)
 
     def _read_values_batch(self, keys, vids, vfiles, vsizes, cat,
                            strict: bool = False) -> None:
-        """Coalesced value fetches for multi_get / scans.
-
-        Groups records by live vSST, reads each file's index blocks once,
-        then fetches records as adjacent-position runs — one random I/O per
-        run instead of one per record (the same run-coalescing the lazy-read
-        GC applies, §III-B.1).  Cache bookkeeping stays per record so the
-        one-record case charges exactly one read per block.
-
-        ``strict`` (multi_get): every entry won a newest-wins lookup, so an
-        unresolvable file or vid mismatch means GC dropped live data.  Scans
-        stay lenient: a truncated ``_scan_once`` pass can surface a
-        superseded REF whose record GC already reclaimed — ``_scan_retry``
-        re-runs it with a larger limit."""
-        by_file: dict[int, set[int]] = {}
-        for k, vid, vf in zip(keys.tolist(), vids.tolist(), vfiles.tolist()):
-            t = self.resolve_value_file(int(vf), int(k), int(vid))
-            if strict:
-                assert t is not None, f"value file for key {k} lost"
-            elif t is None:
-                continue
-            pos = int(t.find(np.array([k], np.uint64))[0])
-            if strict:
-                assert pos >= 0 and int(t.vids[pos]) == vid, "stale locator"
-            elif pos < 0:
-                continue
-            by_file.setdefault(t.fid, set()).add(pos)
-        for fid, posset in by_file.items():
-            t = self.version.value_files[fid]
-            pos = np.array(sorted(posset), np.int64)
-            if t.layout == "rtable":
-                for b in np.unique(t.index_block_of[pos]).tolist():
-                    self.read_block(t, "ib", b, cat, BlockCache.PRI_HIGH,
-                                    t.index_block_bytes())
-                runs = np.split(pos, np.nonzero(np.diff(pos) != 1)[0] + 1)
-                for r in runs:
-                    nbytes = 0
-                    for p in r.tolist():
-                        ck = (t.fid, "rec", p)
-                        if self.cache.get(ck):
-                            self.io.cache_hit(cat)
-                        else:
-                            rb = int(t.rec_bytes[p])
-                            nbytes += rb
-                            self.cache.put(ck, rb, BlockCache.PRI_LOW)
-                    if nbytes:
-                        self.io.rand_read(nbytes, cat)
-            else:
-                self.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
-                                t.index_block_bytes())
-                blocks = t.block_of[pos]
-                for b in np.unique(blocks).tolist():
-                    m = pos[blocks == b]
-                    nb = max(int(t.rec_bytes[m].max()),
-                             t.data_block_bytes(0, b))
-                    self.read_block(t, "d0", b, cat, BlockCache.PRI_LOW, nb)
+        vfetch.read_values_batch(self, keys, vids, vfiles, vsizes, cat,
+                                 strict=strict)
 
     def build_value_files(self, keys, vids, vsizes, cat: str):
-        """Build vSST(s) from sorted records, hot/cold-split when enabled.
+        """Build vSST(s) from sorted records (values layer).
 
         Returns (files, fid_per_record)."""
-        cfg = self.cfg
-        n = len(keys)
-        fid_per_rec = np.zeros(n, np.int64)
-        files: list[SSTable] = []
-        if n == 0:
-            return files, fid_per_rec
-        if cfg.hotcold_write:
-            hot = self.dropcache.is_hot(keys)
-            classes = [(hot, True), (~hot, False)]
-        else:
-            classes = [(np.ones(n, bool), False)]
-        for mask, is_hot in classes:
-            idx = np.nonzero(mask)[0]
-            if len(idx) == 0:
-                continue
-            rec = cfg.value_rec_bytes(vsizes[idx]).astype(np.int64)
-            cum = np.cumsum(rec) - rec
-            fno = cum // cfg.vsst_bytes
-            for f in np.unique(fno):
-                m = idx[fno == f]
-                t = build_vsst(cfg, keys[m], np.full(len(m), self.seq,
-                                                     np.uint64),
-                               vids[m], vsizes[m], is_hot=is_hot)
-                self.version.add_value_file(t)
-                self.io.seq_write(t.file_bytes, cat)
-                fid_per_rec[m] = t.fid
-                files.append(t)
-        return files, fid_per_rec
+        return vbuild.build_value_files(self, keys, vids, vsizes, cat)
 
     # ===================================================== garbage exposure
     def expose_garbage(self, keys, ety, vids, vsizes, vfiles) -> None:
         """Entries dropped during compaction expose value-store garbage
         (Hidden -> Exposed, paper §II-D)."""
-        cfg = self.cfg
-        refm = ety == ETYPE_REF
-        if not refm.any():
-            return
-        keys, vids, vsizes, vfiles = (keys[refm], vids[refm], vsizes[refm],
-                                      vfiles[refm])
-        for k, vid, vsz, vf in zip(keys.tolist(), vids.tolist(),
-                                   vsizes.tolist(), vfiles.tolist()):
-            t = self.version.value_files.get(int(vf))
-            if t is None:
-                t = self.resolve_value_file(int(vf), int(k), int(vid))
-                if t is None:
-                    continue        # record already dropped by a GC
-            pos = int(t.find(np.array([k], np.uint64))[0])
-            if pos < 0 or int(t.vids[pos]) != vid:
-                continue
-            rec = int(t.rec_bytes[pos])
-            t.garbage_bytes += rec
-            if cfg.gc_scheme == "compaction":
-                t.live_refs -= 1
-                if t.live_refs <= 0:
-                    self.version.retire_value_file(t.fid, None)
-                    self.cache.erase_file(t.fid)
-
-    # ============================================= BlobDB relocation (§II-C)
-    def blobdb_relocate(self, kept):
-        """During compaction, rewrite values whose blob files are old or
-        garbage-heavy; blob files die only when fully exhausted."""
-        cfg = self.cfg
-        keys, seqs, ety, vids, vsz, vf = kept
-        refs = np.nonzero(ety == ETYPE_REF)[0]
-        if len(refs) == 0:
-            return kept
-        live = sorted(self.version.value_files)
-        if not live:
-            return kept
-        cutoff_i = live[int(len(live) * cfg.blobdb_age_cutoff)] \
-            if len(live) > 1 else live[0]
-        reloc_rows = []
-        for i in refs.tolist():
-            t = self.version.value_files.get(int(vf[i]))
-            if t is None:
-                continue
-            # RocksDB BlobDB default: relocation by age cutoff only
-            # (garbage-ratio forcing is disabled) — blob files must exhaust
-            # their data through compaction before being reclaimed (§II-C).
-            if t.fid <= cutoff_i:
-                reloc_rows.append(i)
-        if not reloc_rows:
-            return kept
-        rows = np.array(reloc_rows, np.int64)
-        # read old values
-        for i in rows.tolist():
-            t = self.version.value_files[int(vf[i])]
-            self.io.rand_read(int(cfg.value_rec_bytes(int(vsz[i]))),
-                              sio.CAT_GC_READ)
-        new_files, nfids = self.build_value_files(keys[rows], vids[rows],
-                                                  vsz[rows], sio.CAT_GC_WRITE)
-        # retire refs from the old files
-        for i, nf in zip(rows.tolist(), nfids.tolist()):
-            t = self.version.value_files.get(int(vf[i]))
-            if t is not None:
-                pos = int(t.find(np.array([keys[i]], np.uint64))[0])
-                if pos >= 0 and int(t.vids[pos]) == int(vids[i]):
-                    t.garbage_bytes += int(t.rec_bytes[pos])
-                    t.live_refs -= 1
-                    if t.live_refs <= 0:
-                        self.version.retire_value_file(t.fid, None)
-                        self.cache.erase_file(t.fid)
-            vf[i] = nf
-        return (keys, seqs, ety, vids, vsz, vf)
+        vgarbage.expose_garbage(self, keys, ety, vids, vsizes, vfiles)
 
     # ============================================================ writeback
     def writeback_index(self, key: int, vid: int, vsize: int,
@@ -789,28 +470,33 @@ class Store(ScalarOps):
         """Value bytes referenced by stale index entries whose records are
         still physically present (not yet exposed/reclaimed) — the paper's
         G_H.  Uses the stats oracle ``latest`` — measurement only, never an
-        engine decision input."""
-        hidden = 0
-        seen: set = set()
-        for t in self.version.all_kssts():
-            refm = t.etype == ETYPE_REF
-            if not refm.any():
-                continue
-            for k, vid, vsz, vf in zip(t.keys[refm].tolist(),
-                                       t.vids[refm].tolist(),
-                                       t.vsizes[refm].tolist(),
-                                       t.vfiles[refm].tolist()):
-                cur = self.latest.get(k)
-                if cur is not None and cur[0] == vid:
-                    continue                      # live, not garbage
-                if (k, vid) in seen:
-                    continue
-                seen.add((k, vid))
-                vt = self.resolve_value_file(int(vf), int(k), int(vid))
-                if vt is None:
-                    continue                      # already reclaimed by GC
-                hidden += vsz
-        return hidden
+        engine decision input.  Vectorized: one oracle lookup + one chain
+        resolution for the whole REF column."""
+        cols = [(t.keys[m], t.vids[m], t.vsizes[m], t.vfiles[m])
+                for t in self.version.all_kssts()
+                if (m := (t.etype == ETYPE_REF)).any()]
+        if not cols:
+            return 0
+        keys = np.concatenate([c[0] for c in cols])
+        vids = np.concatenate([c[1] for c in cols])
+        vsz = np.concatenate([c[2] for c in cols])
+        vf = np.concatenate([c[3] for c in cols])
+        found, lvids, _ = self.latest.lookup_batch(keys)
+        stale = ~(found & (lvids == vids))      # live version is not garbage
+        if not stale.any():
+            return 0
+        keys, vids, vsz, vf = keys[stale], vids[stale], vsz[stale], vf[stale]
+        # de-duplicate (key, vid), keeping the FIRST occurrence in table
+        # order (a Titan writeback can leave two locators for one record;
+        # the scalar walk resolved whichever it met first)
+        order = np.lexsort((np.arange(len(keys)), vids, keys))
+        k, v = keys[order], vids[order]
+        first = np.ones(len(k), bool)
+        first[1:] = (k[1:] != k[:-1]) | (v[1:] != v[:-1])
+        rows = np.sort(order[first])
+        heads = vresolve.resolve_value_fids(self, vf[rows], keys[rows],
+                                            vids[rows])
+        return int(vsz[rows][heads >= 0].sum())
 
     def stats(self) -> dict:
         wal = self.io.write_bytes.get(sio.CAT_WAL, 0)

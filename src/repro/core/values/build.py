@@ -1,0 +1,42 @@
+"""vSST construction: cut sorted value records into target-size files,
+hot/cold-split when the engine's write policy asks for it (§III-B.3)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..engine.tables import SSTable, build_vsst
+
+
+def build_value_files(store, keys, vids, vsizes, cat: str):
+    """Build vSST(s) from sorted records, hot/cold-split when enabled.
+
+    Returns (files, fid_per_record)."""
+    cfg = store.cfg
+    n = len(keys)
+    fid_per_rec = np.zeros(n, np.int64)
+    files: list[SSTable] = []
+    if n == 0:
+        return files, fid_per_rec
+    if cfg.hotcold_write:
+        hot = store.dropcache.is_hot(keys)
+        classes = [(hot, True), (~hot, False)]
+    else:
+        classes = [(np.ones(n, bool), False)]
+    for mask, is_hot in classes:
+        idx = np.nonzero(mask)[0]
+        if len(idx) == 0:
+            continue
+        rec = cfg.value_rec_bytes(vsizes[idx]).astype(np.int64)
+        cum = np.cumsum(rec) - rec
+        fno = cum // cfg.vsst_bytes
+        for f in np.unique(fno):
+            m = idx[fno == f]
+            t = build_vsst(cfg, keys[m], np.full(len(m), store.seq,
+                                                 np.uint64),
+                           vids[m], vsizes[m], is_hot=is_hot)
+            store.version.add_value_file(t)
+            store.io.seq_write(t.file_bytes, cat)
+            fid_per_rec[m] = t.fid
+            files.append(t)
+    return files, fid_per_rec

@@ -1,0 +1,77 @@
+"""Coalesced value fetch planning for multi_get / scans (§III-B.1).
+
+Vectorized planning: one inheritance-chain resolution pass for the whole
+locator column, one ``find`` per touched vSST (not per record), record
+fetches coalesced into adjacent-position runs — one random I/O per run.
+Per-record *state* (cache residency, LRU order) is inherently per-entry
+and is handled by the cache layer's batched probe
+(``BlockCache.probe_records``) — that loop is the one per-record step the
+byte-parity contract keeps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..engine.cache import BlockCache
+from .resolve import resolve_value_fids
+
+
+def read_values_batch(store, keys, vids, vfiles, vsizes, cat,
+                      strict: bool = False) -> None:
+    """Charge the I/O for fetching value records of resolved entries.
+
+    ``strict`` (multi_get): every entry won a newest-wins lookup, so an
+    unresolvable file or vid mismatch means GC dropped live data.  Scans
+    stay lenient: a truncated scan pass can surface a superseded REF whose
+    record GC already reclaimed — the scan retry loop re-runs it with a
+    larger limit."""
+    n = len(keys)
+    if n == 0:
+        return
+    keys = np.asarray(keys, np.uint64)
+    vids = np.asarray(vids, np.uint64)
+    fids = resolve_value_fids(store, vfiles, keys, vids)
+    if strict:
+        assert (fids >= 0).all(), "value file for live key lost"
+    ok = fids >= 0
+    if not ok.any():
+        return
+    fsel, ksel, vsel = fids[ok], keys[ok], vids[ok]
+    uniq, first = np.unique(fsel, return_index=True)
+    for fid in uniq[np.argsort(first)].tolist():    # first-occurrence order
+        t = store.version.value_files[fid]
+        m = fsel == fid
+        pos = t.find(ksel[m])
+        if strict:
+            assert (pos >= 0).all() and (t.vids[pos] == vsel[m]).all(), \
+                "stale locator"
+            posu = np.unique(pos)
+        else:
+            posu = np.unique(pos[pos >= 0])
+        if len(posu) == 0:
+            continue
+        if t.layout == "rtable":
+            for b in np.unique(t.index_block_of[posu]).tolist():
+                store.read_block(t, "ib", b, cat, BlockCache.PRI_HIGH,
+                                 t.index_block_bytes())
+            runs = np.split(posu, np.nonzero(np.diff(posu) != 1)[0] + 1)
+            for r in runs:
+                rb = t.rec_bytes[r]
+                hits = store.cache.probe_records(t.fid, "rec", r, rb,
+                                                 BlockCache.PRI_LOW)
+                nh = int(hits.sum())
+                if nh:
+                    store.io.cache_hit(cat, nh)
+                nbytes = int(rb[~hits].sum())
+                if nbytes:
+                    store.io.rand_read(nbytes, cat)
+        else:
+            store.read_block(t, "i", 0, cat, BlockCache.PRI_HIGH,
+                             t.index_block_bytes())
+            blocks = t.block_of[posu]
+            for b in np.unique(blocks).tolist():
+                mm = posu[blocks == b]
+                nb = max(int(t.rec_bytes[mm].max()),
+                         t.data_block_bytes(0, b))
+                store.read_block(t, "d0", b, cat, BlockCache.PRI_LOW, nb)

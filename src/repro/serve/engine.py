@@ -34,7 +34,8 @@ class ServeEngine:
                  cache_len: int = 256, page_size: int = 16,
                  hbm_pages: int | None = None,
                  meta_store: Store | None = None,
-                 meta_shards: int = 1, meta_shard_policy: str = "hash"):
+                 meta_shards: int = 1, meta_shard_policy: str = "hash",
+                 meta_engine: str = "scavenger"):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -51,15 +52,18 @@ class ServeEngine:
         # writeback GC batches its index rewrites.  meta_shards > 1 shards
         # the metadata store (hash over rids — the rid domain is unbounded,
         # so range partitioning has nothing to split on).
+        # ``meta_engine`` selects any registered engine strategy for the
+        # metadata store (the serving tier rides the same registry as the
+        # paper benchmarks).
         if meta_store is not None:
             self.meta = meta_store
         elif meta_shards > 1:
             self.meta = ShardedStore(
-                EngineConfig.scaled("scavenger", (4 << 20) // meta_shards),
+                EngineConfig.scaled(meta_engine, (4 << 20) // meta_shards),
                 n_shards=meta_shards, shard_policy=meta_shard_policy,
                 key_space=1 << 20)      # rid domain bound for range policy
         else:
-            self.meta = Store(EngineConfig.scaled("scavenger", 4 << 20))
+            self.meta = Store(EngineConfig.scaled(meta_engine, 4 << 20))
         self.cache = model.init_cache(batch_slots, cache_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)

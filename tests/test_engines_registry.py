@@ -1,0 +1,336 @@
+"""Engine strategy registry, config validation, and the layered-core
+vectorized primitives (Memtable.get_batch, LatestOracle, hidden-garbage)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ENGINES, EngineConfig, EngineStrategy, Store,
+                        WriteBatch, available_engines, register_engine)
+from repro.core.engines import registry as engreg
+from repro.core.engine.memtable import Memtable
+from repro.core.engine.tables import ETYPE_REF
+from repro.core.oracle import LatestOracle
+
+
+def tiny_cfg(engine, **kw):
+    base = dict(
+        memtable_bytes=4 << 10, ksst_bytes=4 << 10, vsst_bytes=16 << 10,
+        base_level_bytes=8 << 10, cache_bytes=8 << 10, dropcache_keys=64,
+        sep_threshold=256, max_levels=5)
+    base.update(kw)
+    return EngineConfig(engine=engine, **base)
+
+
+# ============================================================== registry
+def test_registry_matches_canonical_engine_list():
+    assert available_engines() == ENGINES
+    assert ENGINES[:5] == ("rocksdb", "blobdb", "titan", "terarkdb",
+                           "scavenger")
+    assert "hybrid" in ENGINES
+
+
+def test_unknown_engine_rejected_with_clear_error():
+    with pytest.raises(ValueError, match="unknown engine 'leveldb'"):
+        EngineConfig(engine="leveldb")
+    with pytest.raises(ValueError, match="registered engines"):
+        EngineConfig(engine="")
+
+
+@pytest.mark.parametrize("engine,bad_scheme", [
+    ("rocksdb", "inherit"), ("rocksdb", "writeback"),
+    ("blobdb", "inherit"), ("titan", "compaction"),
+    ("terarkdb", "compaction"), ("scavenger", "none"),
+    ("hybrid", "compaction"),
+])
+def test_incompatible_gc_scheme_rejected(engine, bad_scheme):
+    with pytest.raises(ValueError, match="does not support gc_scheme"):
+        EngineConfig(engine=engine, gc_scheme=bad_scheme)
+
+
+def test_gc_scheme_defaults_and_overrides():
+    assert EngineConfig(engine="rocksdb").gc_scheme == "none"
+    assert EngineConfig(engine="blobdb").gc_scheme == "compaction"
+    assert EngineConfig(engine="titan").gc_scheme == "writeback"
+    assert EngineConfig(engine="terarkdb").gc_scheme == "inherit"
+    assert EngineConfig(engine="scavenger").gc_scheme == "inherit"
+    assert EngineConfig(engine="hybrid").gc_scheme == "inherit"
+    # terarkdb/scavenger/hybrid accept the writeback ablation
+    cfg = EngineConfig(engine="scavenger", gc_scheme="writeback")
+    assert cfg.gc_scheme == "writeback"
+
+
+def test_strategy_flag_defaults():
+    scav = EngineConfig(engine="scavenger")
+    assert (scav.compensated_compaction and scav.lazy_read
+            and scav.index_decoupled and scav.hotcold_write)
+    tdb = EngineConfig(engine="terarkdb")
+    assert not (tdb.compensated_compaction or tdb.lazy_read
+                or tdb.index_decoupled or tdb.hotcold_write)
+    rdb = EngineConfig(engine="rocksdb")
+    assert not rdb.kv_separated
+    hyb = EngineConfig(engine="hybrid")
+    assert hyb.kv_separated and hyb.compensated_compaction
+
+
+def test_custom_engine_registration_roundtrip():
+    """A third-party engine plugs in with zero core edits."""
+
+    @register_engine
+    class EagerSepEngine(EngineStrategy):
+        name = "eager-sep-test"
+        kv_separated = True
+        gc_schemes = ("inherit",)
+
+        def separation_mask(self, store, keys, ety, vsizes):
+            from repro.core.engine.tables import ETYPE_INLINE
+            return ety == ETYPE_INLINE        # separate everything
+
+    try:
+        s = Store(tiny_cfg("eager-sep-test"))
+        oracle = {}
+        for k in range(30):
+            oracle[k] = s.put(k, 64)          # below any size threshold
+        s.flush()
+        assert len(s.version.value_files) >= 1   # even tiny values separated
+        for k, v in oracle.items():
+            assert s.get(k) == v
+        # reusing a registered name (built-in or custom) must fail fast
+        with pytest.raises(ValueError, match="already registered"):
+            @register_engine
+            class Clobber(EngineStrategy):
+                name = "scavenger"
+    finally:
+        del engreg._REGISTRY["eager-sep-test"]
+
+
+# ================================================================ hybrid
+def test_hybrid_size_tiered_placement():
+    cfg = tiny_cfg("hybrid", hybrid_large_threshold=4096)
+    s = Store(cfg)
+    s.put(1, 64)        # small  -> inline
+    s.put(2, 1000)      # medium, cold -> separated
+    s.put(3, 8000)      # large  -> separated
+    s.rotate_memtable()
+    s._flush_job()      # flush exactly one kSST, no compactions yet
+    t = s.version.levels[0][0]
+    etype = {int(k): int(e) for k, e in zip(t.keys, t.etype)}
+    assert etype[1] != ETYPE_REF
+    assert etype[2] == ETYPE_REF
+    assert etype[3] == ETYPE_REF
+
+
+def test_hybrid_hot_medium_values_stay_inline():
+    cfg = tiny_cfg("hybrid", hybrid_large_threshold=4096)
+    s = Store(cfg)
+    s.dropcache.record(np.array([7], np.uint64))    # key 7 is write-hot
+    s.put(7, 1000)      # medium + hot -> inline
+    s.put(8, 1000)      # medium + cold -> separated
+    s.put(9, 8000)      # large, hot or not -> separated
+    s.dropcache.record(np.array([9], np.uint64))
+    s.rotate_memtable()
+    s._flush_job()
+    t = s.version.levels[0][0]
+    etype = {int(k): int(e) for k, e in zip(t.keys, t.etype)}
+    assert etype[7] != ETYPE_REF
+    assert etype[8] == ETYPE_REF
+    assert etype[9] == ETYPE_REF
+
+
+def test_hybrid_full_workload_roundtrip():
+    s = Store(tiny_cfg("hybrid", gc_garbage_ratio=0.05))
+    oracle = {}
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        for k in range(40):
+            if rng.random() < 0.7:
+                oracle[k] = s.put(k, int(rng.choice([64, 1000, 9000])))
+        s.flush()
+    for k, v in oracle.items():
+        assert s.get(k) == v
+
+
+# =================================================== promoted constants
+def test_write_pressure_constants_are_config_fields():
+    assert EngineConfig().max_immutables == 2
+    assert EngineConfig().delayed_write_rate == 16.0
+    # a tighter immutable cap must stall the foreground more
+    def run(max_imm):
+        s = Store(tiny_cfg("scavenger", max_immutables=max_imm))
+        for k in range(200):
+            s.put(k, 600)
+        return s.stall_us
+    assert run(0) >= run(8)
+
+
+# ==================================================== vectorized probes
+def test_memtable_get_batch_matches_scalar_get():
+    cfg = EngineConfig(engine="scavenger")
+    mt = Memtable(cfg)
+    rng = np.random.default_rng(11)
+    for i in range(200):
+        k = int(rng.integers(0, 64))
+        if rng.random() < 0.2:
+            mt.delete(k, i)
+        elif rng.random() < 0.3:
+            mt.put_ref(k, i, i + 1, int(rng.integers(1, 999)), 5)
+        else:
+            mt.put(k, i, i + 1, int(rng.integers(1, 999)))
+    probe = np.arange(0, 80, dtype=np.uint64)
+    found, seqs, ety, vids, vsz, vf = mt.get_batch(probe)
+    for j, k in enumerate(probe.tolist()):
+        e = mt.get(k)
+        assert bool(found[j]) == (e is not None)
+        if e is not None:
+            assert (int(seqs[j]), int(ety[j]), int(vids[j]), int(vsz[j]),
+                    int(vf[j])) == e
+
+
+def test_memtable_snapshot_invalidation():
+    cfg = EngineConfig(engine="scavenger")
+    mt = Memtable(cfg)
+    mt.put(5, 1, 1, 100)
+    k1, *_ = mt.snapshot()
+    assert k1.tolist() == [5]
+    mt.put(3, 2, 2, 100)
+    k2, *_ = mt.snapshot()
+    assert k2.tolist() == [3, 5]
+
+
+def test_latest_oracle_matches_dict_reference():
+    rng = np.random.default_rng(99)
+    oracle = LatestOracle()
+    ref: dict = {}
+    ref_valid = 0
+    for _ in range(40):
+        n = int(rng.integers(1, 32))
+        keys = rng.integers(0, 50, n).astype(np.uint64)
+        is_put = rng.random(n) < 0.8
+        vids = rng.integers(1, 1 << 20, n).astype(np.uint64)
+        vsz = np.where(is_put, rng.integers(1, 5000, n), 0).astype(np.int64)
+        oracle.apply_batch(is_put, keys, vids, vsz)
+        for j in range(n):
+            k = int(keys[j])
+            prev = ref.pop(k, None)
+            if prev is not None:
+                ref_valid -= prev[1]
+            if is_put[j]:
+                ref[k] = (int(vids[j]), int(vsz[j]))
+                ref_valid += int(vsz[j])
+        assert oracle.valid_bytes == ref_valid
+        assert len(oracle) == len(ref)
+    for k in range(55):
+        assert oracle.get(k) == ref.get(k)
+    found, vids, vsz = oracle.lookup_batch(np.arange(55, dtype=np.uint64))
+    for k in range(55):
+        assert bool(found[k]) == (k in ref)
+        if k in ref:
+            assert (int(vids[k]), int(vsz[k])) == ref[k]
+
+
+def test_hidden_garbage_matches_scalar_reference():
+    s = Store(tiny_cfg("terarkdb"))
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        for k in range(30):
+            if rng.random() < 0.8:
+                s.put(k, 1500)
+        s.flush()
+
+    # scalar reimplementation of the pre-refactor walk
+    hidden, seen = 0, set()
+    for t in s.version.all_kssts():
+        refm = t.etype == ETYPE_REF
+        for k, vid, vsz, vf in zip(t.keys[refm].tolist(),
+                                   t.vids[refm].tolist(),
+                                   t.vsizes[refm].tolist(),
+                                   t.vfiles[refm].tolist()):
+            cur = s.latest.get(k)
+            if cur is not None and cur[0] == vid:
+                continue
+            if (k, vid) in seen:
+                continue
+            seen.add((k, vid))
+            vt = s.resolve_value_file(int(vf), int(k), int(vid))
+            if vt is None:
+                continue
+            hidden += vsz
+    assert s.hidden_garbage_bytes() == hidden
+    assert hidden > 0       # overwrites left stale refs behind
+
+
+@pytest.mark.parametrize("engine", ["terarkdb", "scavenger", "hybrid"])
+def test_chain_compression_matches_uncompressed_walk(engine):
+    """Differential check of compress_group: resolve every REF locator in
+    the store through (a) a reference uncompressed chain walk over a
+    snapshot of the group structure and (b) the production vectorized
+    resolver (which compresses in place) — results must agree exactly."""
+    from repro.core.values.resolve import resolve_value_fids
+
+    s = Store(tiny_cfg(engine, gc_garbage_ratio=0.05))
+    rng = np.random.default_rng(17)
+    for _ in range(8):          # many GC generations -> deep chains
+        for k in range(40):
+            if rng.random() < 0.7:
+                s.put(k, int(rng.choice([700, 1500, 4000])))
+        s.flush()
+    assert s.n_gc_runs > 2
+
+    # snapshot the (uncompressed or partially-compressed) group structure
+    snap = {fid: list(g.files) for fid, g in s.chains.items()}
+    live = set(s.version.value_files)
+
+    def ref_resolve(vf, k, vid):
+        cur = int(vf)
+        for _ in range(10_000):
+            if cur in live:
+                return cur
+            members = snap.get(cur)
+            if members is None:
+                return -1
+            nxt = -1
+            for t in members:
+                p = int(t.find(np.array([k], np.uint64))[0])
+                if p >= 0 and int(t.vids[p]) == vid:
+                    nxt = t.fid
+                    break
+            if nxt < 0:
+                return -1
+            cur = nxt
+        raise RuntimeError("cycle")
+
+    checked = 0
+    for t in s.version.all_kssts():
+        m = t.etype == ETYPE_REF
+        if not m.any():
+            continue
+        keys, vids, vfs = t.keys[m], t.vids[m], t.vfiles[m]
+        want = [ref_resolve(vf, int(k), int(v))
+                for k, v, vf in zip(keys.tolist(), vids.tolist(),
+                                    vfs.tolist())]
+        got = resolve_value_fids(s, vfs, keys, vids)   # compresses in place
+        assert got.tolist() == want
+        checked += len(want)
+    assert checked > 0
+
+
+def test_scan_accepts_negative_start_key():
+    s = Store(tiny_cfg("scavenger"))
+    for k in range(20):
+        s.put(k, 600)
+    s.flush()                       # keys now live in SSTables
+    got = s.scan(-3, 5)
+    assert [k for k, _ in got] == [0, 1, 2, 3, 4]
+
+
+def test_write_batch_oracle_consistency_through_store():
+    """latest oracle tracks last-write-wins through the batched write path
+    (duplicate keys inside one batch, deletes of missing keys)."""
+    s = Store(tiny_cfg("scavenger"))
+    b = WriteBatch()
+    b.puts(np.array([1, 2, 1], np.uint64), np.array([100, 200, 300],
+                                                    np.int64))
+    b.deletes(np.array([2, 9], np.uint64))
+    vids = s.write(b)
+    assert s.latest.get(1) == (int(vids[2]), 300)   # second put of key 1 won
+    assert s.latest.get(2) is None                  # deleted in same batch
+    assert s.valid_bytes == 300

@@ -1,0 +1,195 @@
+"""Golden I/O-accounting parity for the layered-core refactor.
+
+The five paper engines must be *byte-identical* to their pre-refactor
+behaviour: the goldens below were captured by running this exact workload
+against the pre-refactor monolithic ``Store`` (PR 2 tree), and the layered
+core must reproduce every byte/op counter and derived ratio.  ``hybrid``
+(added by the refactor) is locked in as a regression golden from its first
+implementation.
+
+Regenerate (only when the change is *meant* to alter accounting)::
+
+    PYTHONPATH=src:tests python -m test_refactor_parity
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Store
+
+# Stats fields that must match exactly (ints) and to float precision.
+INT_FIELDS = ("space_bytes", "valid_bytes", "user_write_bytes",
+              "read_bytes", "write_bytes", "n_compactions", "n_gc_runs")
+FLOAT_FIELDS = ("space_amp", "s_index", "exposed_over_valid", "write_amp",
+                "cache_hit_ratio", "stall_s", "gc_time_s", "clock_s")
+
+N_KEYS = 4096
+VSIZES = np.array([64, 200, 600, 2000, 9000], np.int64)
+
+
+def run_fixed_workload(engine: str) -> dict:
+    """Deterministic mixed workload: seeded writes, deletes, point reads and
+    scans, then a full drain.  Every engine sees the identical op stream."""
+    from repro.core import WriteBatch
+
+    cfg = EngineConfig.scaled(engine, 8 << 20, est_keys=N_KEYS)
+    store = Store(cfg)
+    rng = np.random.default_rng(1234)
+    for _ in range(6):
+        keys = rng.integers(0, N_KEYS, 256).astype(np.uint64)
+        sizes = VSIZES[rng.integers(0, len(VSIZES), 256)]
+        store.write(WriteBatch().puts(keys, sizes))
+        dels = rng.integers(0, N_KEYS, 16).astype(np.uint64)
+        store.write(WriteBatch().deletes(dels))
+        gets = rng.integers(0, N_KEYS, 128).astype(np.uint64)
+        res = store.multi_get(gets)
+        # semantic check against the oracle while we are at it
+        for k, found, vid in zip(gets.tolist(), res["found"].tolist(),
+                                 res["vid"].tolist()):
+            cur = store.latest.get(int(k))
+            assert (cur is not None) == bool(found)
+            if cur is not None:
+                assert cur[0] == vid
+        starts = rng.integers(0, N_KEYS, 8).astype(np.int64)
+        store.multi_scan(starts, 10)
+    store.drain()
+    st = store.stats()
+    out = {f: int(st[f]) for f in INT_FIELDS}
+    out.update({f: float(st[f]) for f in FLOAT_FIELDS})
+    return out
+
+
+# Captured from the pre-refactor monolithic Store (see module docstring).
+GOLDENS: dict[str, dict] = {
+    "rocksdb": {
+        "cache_hit_ratio": 0.01598173515981735,
+        "clock_s": 0.05287324759999993,
+        "exposed_over_valid": 0.0,
+        "gc_time_s": 0.0,
+        "n_compactions": 66,
+        "n_gc_runs": 0,
+        "read_bytes": 41699616,
+        "s_index": 1.0856594995599145,
+        "space_amp": 1.0603116125566046,
+        "space_bytes": 3315552,
+        "stall_s": 0.042306713066666515,
+        "user_write_bytes": 3832768,
+        "valid_bytes": 3126960,
+        "write_amp": 11.105315009935378,
+        "write_bytes": 46396864,
+    },
+    "blobdb": {
+        "cache_hit_ratio": 0.23008849557522124,
+        "clock_s": 0.04748628879999961,
+        "exposed_over_valid": 0.03258897854506787,
+        "gc_time_s": 0.02046105200000003,
+        "n_compactions": 32,
+        "n_gc_runs": 0,
+        "read_bytes": 9656520,
+        "s_index": 1.1011250740180274,
+        "space_amp": 1.1155371351088597,
+        "space_bytes": 3488240,
+        "stall_s": 0.03812402106666666,
+        "user_write_bytes": 3832768,
+        "valid_bytes": 3126960,
+        "write_amp": 2.7838846494230802,
+        "write_bytes": 14502752,
+    },
+    "titan": {
+        "cache_hit_ratio": 0.30306122448979594,
+        "clock_s": 0.021129054133333353,
+        "exposed_over_valid": 0.03369757492880352,
+        "gc_time_s": 0.021129054133333384,
+        "n_compactions": 38,
+        "n_gc_runs": 5,
+        "read_bytes": 5998040,
+        "s_index": 1.1011250740180274,
+        "space_amp": 1.1142681710031468,
+        "space_bytes": 3484272,
+        "stall_s": 0.0,
+        "user_write_bytes": 3832768,
+        "valid_bytes": 3126960,
+        "write_amp": 1.5763187336149749,
+        "write_bytes": 9874432,
+    },
+    "terarkdb": {
+        "cache_hit_ratio": 0.22786759045419552,
+        "clock_s": 0.018840202933333362,
+        "exposed_over_valid": 0.033905110862936516,
+        "gc_time_s": 0.01884020293333338,
+        "n_compactions": 38,
+        "n_gc_runs": 5,
+        "read_bytes": 5984776,
+        "s_index": 1.1011250740180274,
+        "space_amp": 1.1142246782817817,
+        "space_bytes": 3484136,
+        "stall_s": 0.0,
+        "user_write_bytes": 3832768,
+        "valid_bytes": 3126960,
+        "write_amp": 1.5691030607644396,
+        "write_bytes": 9846776,
+    },
+    "scavenger": {
+        "cache_hit_ratio": 0.314638783269962,
+        "clock_s": 0.010316862933333336,
+        "exposed_over_valid": 0.03524015179586778,
+        "gc_time_s": 0.01031686293333333,
+        "n_compactions": 63,
+        "n_gc_runs": 6,
+        "read_bytes": 4667568,
+        "s_index": 1.0272625420141914,
+        "space_amp": 1.096822472944969,
+        "space_bytes": 3429720,
+        "stall_s": 4.440746666666678e-05,
+        "user_write_bytes": 3832768,
+        "valid_bytes": 3126960,
+        "write_amp": 1.6953345467296743,
+        "write_bytes": 10330592,
+    },
+    # hybrid post-dates the refactor: its golden is a regression lock from
+    # the first implementation, not a pre-refactor capture.
+    "hybrid": {
+        "cache_hit_ratio": 0.3016917293233083,
+        "clock_s": 0.010728240266666668,
+        "exposed_over_valid": 0.03544394895454487,
+        "gc_time_s": 0.010728240266666664,
+        "n_compactions": 63,
+        "n_gc_runs": 6,
+        "read_bytes": 4880928,
+        "s_index": 1.0239894840617811,
+        "space_amp": 1.0961828741013637,
+        "space_bytes": 3427720,
+        "stall_s": 4.440746666666678e-05,
+        "user_write_bytes": 3832768,
+        "valid_bytes": 3126960,
+        "write_amp": 1.7242619433265984,
+        "write_bytes": 10441464,
+    },
+}
+
+
+@pytest.mark.parametrize("engine", sorted(GOLDENS))
+def test_refactor_parity(engine):
+    got = run_fixed_workload(engine)
+    want = GOLDENS[engine]
+    for f in INT_FIELDS:
+        assert got[f] == want[f], f"{engine}.{f}: {got[f]} != {want[f]}"
+    for f in FLOAT_FIELDS:
+        assert math.isclose(got[f], want[f], rel_tol=1e-9, abs_tol=1e-12), \
+            f"{engine}.{f}: {got[f]} != {want[f]}"
+
+
+if __name__ == "__main__":
+    import json
+    engines = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger")
+    try:
+        from repro.core import ENGINES as _all
+        engines = tuple(_all)
+    except Exception:
+        pass
+    all_out = {e: run_fixed_workload(e) for e in engines}
+    print(json.dumps(all_out, indent=2, sort_keys=True))
