@@ -89,3 +89,44 @@ def row(name: str, us: float, **derived) -> dict:
     dstr = " ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
                     for k, v in derived.items())
     return {"name": name, "us_per_call": round(us, 3), "derived": dstr}
+
+
+# --------------------------------------------------- perf-history trajectory
+TRAJECTORY_FILE = "BENCH_adaptive.json"
+
+
+def persist_trajectory(section: str, rows: list[dict],
+                       path: str | None = None) -> str:
+    """Append one benchmark run to the repo-root ``BENCH_adaptive.json``
+    trajectory file (a JSON list, one entry per run), so perf history
+    accumulates across sessions instead of evaporating with stdout.
+
+    Entries carry the section name, the bench scale, a UTC timestamp, and
+    the standard CSV-contract rows.  A corrupt/legacy file is restarted
+    rather than crashing the benchmark."""
+    import datetime
+    import json
+
+    if path is None:
+        path = os.environ.get(
+            "REPRO_BENCH_TRAJECTORY",
+            os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), TRAJECTORY_FILE))
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if not isinstance(data, list):
+            data = []
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = []
+    data.append({
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "section": section,
+        "scale": scale_name(),
+        "rows": rows,
+    })
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

@@ -1,10 +1,15 @@
 """§Perf report: baseline vs optimized cells, from dry-run artifacts.
 
   PYTHONPATH=src:. python -m benchmarks.perf_report
+
+Besides printing the markdown table, the report appends its rows to the
+repo-root ``BENCH_adaptive.json`` trajectory file (``common.
+persist_trajectory``) so perf history survives across runs.
 """
 
 from __future__ import annotations
 
+from .common import persist_trajectory
 from .roofline import BASELINE, OPTIMIZED, analyze, load_cells
 
 
@@ -17,24 +22,38 @@ def pairs():
         yield key, base[key], opt[key]
 
 
-def main():
-    print("| cell | mesh | term | baseline | optimized | x |")
-    print("|---|---|---|---|---|---|")
+def report_rows() -> list[dict]:
+    """-> trajectory rows: one per (cell, mesh, term) with the speedup."""
+    rows = []
     for (arch, shape, mesh), b, o in pairs():
         ab, ao = analyze(b, BASELINE), analyze(o, OPTIMIZED)
-        rows = [
-            ("memory s", ab["t_memory_s"], ao["t_memory_s"]),
-            ("collective s", ab["t_collective_s"], ao["t_collective_s"]),
-            ("roofline frac", ab["roofline_frac"], ao["roofline_frac"]),
-            ("temp GB (HLO)", ab["temp_bytes"] / 1e9,
-             ao["temp_bytes"] / 1e9),
-            ("coll GB (HLO)", ab["hlo_collective_bytes"] / 1e9,
+        for name, bv, ov in [
+            ("memory_s", ab["t_memory_s"], ao["t_memory_s"]),
+            ("collective_s", ab["t_collective_s"], ao["t_collective_s"]),
+            ("roofline_frac", ab["roofline_frac"], ao["roofline_frac"]),
+            ("temp_gb_hlo", ab["temp_bytes"] / 1e9, ao["temp_bytes"] / 1e9),
+            ("coll_gb_hlo", ab["hlo_collective_bytes"] / 1e9,
              ao["hlo_collective_bytes"] / 1e9),
-        ]
-        for name, bv, ov in rows:
-            x = (bv / ov) if ov else float("inf")
-            print(f"| {arch}/{shape} | {mesh} | {name} | {bv:.4g} | "
-                  f"{ov:.4g} | {x:.1f} |")
+        ]:
+            # None (not inf) when the optimized term is 0: float('inf')
+            # serializes as the non-RFC-8259 token "Infinity" and would
+            # corrupt the JSON trajectory for strict parsers
+            rows.append({"cell": f"{arch}/{shape}", "mesh": mesh,
+                         "term": name, "baseline": bv, "optimized": ov,
+                         "x": (bv / ov) if ov else None})
+    return rows
+
+
+def main():
+    rows = report_rows()
+    print("| cell | mesh | term | baseline | optimized | x |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        x = f"{r['x']:.1f}" if r["x"] is not None else "inf"
+        print(f"| {r['cell']} | {r['mesh']} | {r['term']} | "
+              f"{r['baseline']:.4g} | {r['optimized']:.4g} | {x} |")
+    path = persist_trajectory("perf_report", rows)
+    print(f"# trajectory appended to {path}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """Scavenger core: KV-separated LSM-tree engines (paper's contribution).
 
-Six selectable engines over one deterministic substrate:
-rocksdb | blobdb | titan | terarkdb | scavenger | hybrid — each a pluggable
-strategy object resolved from the ``repro.core.engines`` registry (see
-DESIGN.md §7 for the layered architecture and the extension recipe).
+Seven selectable engines over one deterministic substrate:
+rocksdb | blobdb | titan | terarkdb | scavenger | hybrid |
+scavenger_adaptive — each a pluggable strategy object resolved from the
+``repro.core.engines`` registry (see DESIGN.md §7 for the layered
+architecture and the extension recipe, §8 for the adaptive subsystem).
 """
 
 from .batch import WriteBatch

@@ -1,0 +1,84 @@
+"""Residual value-lifetime prediction from update-interval histograms.
+
+DumpKV (arXiv:2406.01250) shows that knowing *when* a value will die lets
+GC skip rewrites that are about to become garbage anyway.  We estimate
+lifetimes per **key-group** (``splitmix64(key) % n_groups`` — group-level
+stats stay robust under key-space churn and bound memory): every observed
+write to a group contributes its inter-update interval, in user ops, to a
+decayed log2-bucket histogram; the histogram's mean is the group's expected
+value lifetime, and the residual for a value of known age follows from it.
+
+All updates are columnar: one ``np.unique`` + fancy-indexing pass per
+observed batch (an in-batch repeat of a group is a ~0-interval update; one
+observation per group per batch keeps the histogram meaningful at any batch
+size).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .sketch import normalize_half_life
+
+N_BUCKETS = 32          # log2 interval buckets: covers up to 2^31 ops
+
+
+class LifetimeEstimator:
+    __slots__ = ("n_groups", "half_life", "last_write", "hist", "_centers")
+
+    def __init__(self, n_groups: int, half_life: float | None = None):
+        if n_groups < 1:
+            raise ValueError("n_groups must be >= 1")
+        self.n_groups = int(n_groups)
+        self.half_life = normalize_half_life(half_life)
+        self.last_write = np.full(self.n_groups, -1.0, np.float64)
+        self.hist = np.zeros((self.n_groups, N_BUCKETS), np.float64)
+        # bucket b holds intervals in [2^b, 2^(b+1)); center = 1.5 * 2^b
+        self._centers = 1.5 * 2.0 ** np.arange(N_BUCKETS, dtype=np.float64)
+
+    # ------------------------------------------------------------- observe
+    def observe(self, groups: np.ndarray, now: float) -> None:
+        """Record one write-interval observation per distinct group."""
+        if len(groups) == 0:
+            return
+        ug = np.unique(np.asarray(groups, np.int64))
+        prev = self.last_write[ug]
+        has = prev >= 0
+        sel = ug[has]
+        if len(sel):
+            iv = np.maximum(now - prev[has], 1.0)
+            b = np.clip(np.log2(iv).astype(np.int64), 0, N_BUCKETS - 1)
+            if self.half_life is not None:
+                # lazy per-group decay: scale by time since last observation
+                self.hist[sel] *= (0.5 ** (iv / self.half_life))[:, None]
+            self.hist[sel, b] += 1.0
+        self.last_write[ug] = now
+
+    # ------------------------------------------------------------- queries
+    def mean_interval(self, groups: np.ndarray,
+                      default: float = np.inf) -> np.ndarray:
+        """Expected update interval (ops) per group; ``default`` where the
+        group has no observations yet (treat unknown as cold)."""
+        g = np.asarray(groups, np.int64)
+        h = self.hist[g]
+        w = h.sum(axis=1)
+        mean = (h @ self._centers) / np.maximum(w, 1e-12)
+        return np.where(w > 1e-9, mean, default)
+
+    def residual(self, groups: np.ndarray, now: float,
+                 default: float = np.inf) -> np.ndarray:
+        """Predicted remaining ops until each group's values are next
+        overwritten.
+
+        Within the predicted interval: the mean interval less the age,
+        floored at a tenth of the mean (updates are not clockwork; a live
+        hot group's residual never hits zero).  *Past* it, the prediction
+        has been falsified — the group stopped updating on schedule (e.g. a
+        hotspot moved away) — so the residual grows with the age instead:
+        values that keep surviving are expected to keep surviving, and GC
+        stops deferring files full of retired-hotspot data."""
+        g = np.asarray(groups, np.int64)
+        m = self.mean_interval(g, default)
+        age = np.where(self.last_write[g] >= 0,
+                       now - self.last_write[g], 0.0)
+        return np.where(age > m, age, np.maximum(m - age, 0.1 * m))

@@ -1,0 +1,94 @@
+"""Exponentially-decayed count-min frequency sketch.
+
+A ``DecaySketch`` estimates per-key event rates from a stream of columnar
+batches in O(depth * width) memory.  Two properties matter to callers:
+
+  * **Conservative**: with decay disabled the estimate for any key is
+    >= its true event count (count-min over-counts on collisions, never
+    under-counts) — ``tests/test_adaptive.py`` locks this against an exact
+    oracle.
+  * **Decay monotonicity**: advancing the op clock without adding events
+    can only lower estimates (each row scales by ``0.5 ** (d / half_life)``),
+    so a key that stops being written cools off on a half-life schedule —
+    this is what makes a *shifting* hotspot reclassify instead of sticking.
+
+Updates are vectorized (``np.add.at`` per row, ``depth`` is a small
+constant): a whole key column crosses in one call, zero per-key loops.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..engine.keys import splitmix64
+
+
+def normalize_half_life(half_life: float | None) -> float | None:
+    """Shared decay-window normalization: None / inf / <= 0 all mean
+    "no decay" (used by DecaySketch and LifetimeEstimator so the two stay
+    in lockstep on what "disabled" means)."""
+    if half_life and np.isfinite(half_life) and half_life > 0:
+        return float(half_life)
+    return None
+
+
+class DecaySketch:
+    __slots__ = ("width", "depth", "half_life", "counts", "clock", "_seeds")
+
+    def __init__(self, width: int, depth: int = 2,
+                 half_life: float | None = None, seed: int = 0):
+        if width < 1 or depth < 1:
+            raise ValueError("sketch width and depth must be >= 1")
+        self.width = int(width)
+        self.depth = int(depth)
+        self.half_life = normalize_half_life(half_life)
+        self.counts = np.zeros((self.depth, self.width), np.float64)
+        self.clock = 0.0
+        self._seeds = splitmix64(
+            np.uint64(seed) + np.arange(1, self.depth + 1, dtype=np.uint64))
+
+    # ---------------------------------------------------------------- decay
+    def decay_to(self, clock: float) -> None:
+        """Advance the op clock, scaling all counters by the elapsed decay."""
+        d = float(clock) - self.clock
+        if d <= 0:
+            return
+        self.clock = float(clock)
+        if self.half_life is not None:
+            self.counts *= 0.5 ** (d / self.half_life)
+
+    # --------------------------------------------------------------- update
+    def _rows(self, keys: np.ndarray) -> np.ndarray:
+        """(depth, n) column indices for a key column."""
+        ks = np.asarray(keys, np.uint64)
+        return (splitmix64(ks[None, :] ^ self._seeds[:, None])
+                % np.uint64(self.width)).astype(np.int64)
+
+    def add(self, keys: np.ndarray, weights=None) -> None:
+        """Add one event (or ``weights``) per key, vectorized."""
+        if len(keys) == 0:
+            return
+        w = (np.ones(len(keys), np.float64) if weights is None
+             else np.asarray(weights, np.float64))
+        idx = self._rows(keys)
+        for r in range(self.depth):
+            np.add.at(self.counts[r], idx[r], w)
+
+    # -------------------------------------------------------------- queries
+    def estimate(self, keys: np.ndarray) -> np.ndarray:
+        """Decayed event-count estimate per key (count-min: min over rows)."""
+        if len(keys) == 0:
+            return np.zeros(0, np.float64)
+        idx = self._rows(keys)
+        est = self.counts[0][idx[0]]
+        for r in range(1, self.depth):
+            est = np.minimum(est, self.counts[r][idx[r]])
+        return est
+
+    def total_mass(self) -> float:
+        """Total decayed event mass (row 0 — every row sums the same adds)."""
+        return float(self.counts[0].sum())
+
+    def active_slots(self) -> int:
+        """Occupied row-0 slots — a lower bound on distinct active keys."""
+        return int(np.count_nonzero(self.counts[0] > 1e-9))

@@ -18,11 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 
-# Canonical built-in engine list (the five paper engines + hybrid).  The
-# source of truth is the strategy registry (``repro.core.engines``) — this
-# tuple exists so callers can enumerate engines without importing it;
-# ``tests/test_engines_registry.py`` asserts the two stay in sync.
-ENGINES = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger", "hybrid")
+# Canonical built-in engine list (the five paper engines + hybrid +
+# scavenger_adaptive).  The source of truth is the strategy registry
+# (``repro.core.engines``) — this tuple exists so callers can enumerate
+# engines without importing it; ``tests/test_engines_registry.py`` asserts
+# the two stay in sync.
+ENGINES = ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger", "hybrid",
+           "scavenger_adaptive")
 
 
 @dataclasses.dataclass
@@ -88,6 +90,18 @@ class EngineConfig:
     index_decoupled: bool | None = None          # L: DTable KF/KV split
     hotcold_write: bool | None = None            # W: DropCache routing
 
+    # ---- adaptive workload tracking (core/adaptive/, DESIGN.md §8) ----
+    adaptive_enabled: bool | None = None    # None -> per-engine default
+    adaptive_groups: int = 1024             # lifetime/temperature key-groups
+    adaptive_sketch_width: int = 4096       # decayed-frequency sketch width
+    adaptive_sketch_depth: int = 2          # count-min rows
+    adaptive_half_life_ops: float = 50_000.0   # decay half-life, user ops
+    adaptive_gc_horizon_ops: float = 25_000.0  # dead-byte prediction window
+    adaptive_defer_weight: float = 0.7      # GC deferral strength, [0, 1]
+    adaptive_score_refresh_ops: int = 2048  # candidate-score cache window
+    temp_hot_mult: float = 4.0              # hot: rate >= mult * mean rate
+    temp_cold_mult: float = 0.5             # cold: rate <= mult * mean rate
+
     def __post_init__(self):
         # lazy import: the strategy modules import table/IO substrate, which
         # imports this module — resolving at construction breaks the cycle
@@ -102,9 +116,37 @@ class EngineConfig:
                 f"{self.gc_scheme!r} (supported: "
                 f"{', '.join(strat.gc_schemes)})")
         for flag in ("compensated_compaction", "lazy_read",
-                     "index_decoupled", "hotcold_write"):
+                     "index_decoupled", "hotcold_write", "adaptive_enabled"):
             if getattr(self, flag) is None:
                 setattr(self, flag, getattr(strat, flag))
+        if self.adaptive_enabled and not strat.adaptive_enabled:
+            # only strategies that construct a tracker honor the flag; a
+            # silent no-op would masquerade as workload-adaptive GC
+            raise ValueError(
+                f"engine {self.engine!r} does not support "
+                f"adaptive_enabled=True (use engine='scavenger_adaptive')")
+        self._validate_adaptive()
+
+    def _validate_adaptive(self):
+        """Bounds for the adaptive-tracker knobs (always checked: the
+        fields exist on every engine even when tracking is off)."""
+        for field in ("adaptive_groups", "adaptive_sketch_width",
+                      "adaptive_sketch_depth"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1, got "
+                                 f"{getattr(self, field)}")
+        for field in ("adaptive_half_life_ops", "adaptive_gc_horizon_ops",
+                      "adaptive_score_refresh_ops"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be > 0, got "
+                                 f"{getattr(self, field)}")
+        if not 0.0 <= self.adaptive_defer_weight <= 1.0:
+            raise ValueError("adaptive_defer_weight must be in [0, 1], got "
+                             f"{self.adaptive_defer_weight}")
+        if not 0.0 <= self.temp_cold_mult < self.temp_hot_mult:
+            raise ValueError(
+                "need 0 <= temp_cold_mult < temp_hot_mult, got "
+                f"{self.temp_cold_mult} / {self.temp_hot_mult}")
 
     # ------------------------------------------------------------ properties
     @property
@@ -160,6 +202,10 @@ class EngineConfig:
             cache_bytes=max(64 << 10, int(dataset_bytes * 0.01)),
             dropcache_keys=min(max(512, int(dataset_bytes / 4096 * 0.02)),
                                max(16, est_keys // 4)),
+            # adaptive-tracker windows scale with the keyspace: decay over
+            # ~2 full passes of updates, predict one pass ahead
+            adaptive_half_life_ops=float(max(4096, 2 * est_keys)),
+            adaptive_gc_horizon_ops=float(max(2048, est_keys)),
         )
         cfg.update(overrides)
         return cls(**cfg)

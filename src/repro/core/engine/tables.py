@@ -27,6 +27,12 @@ ETYPE_INLINE = 0
 ETYPE_REF = 1
 ETYPE_TOMB = 2
 
+# vSST temperature classes (adaptive segregation, DESIGN.md §8; the
+# adaptive layer's TemperatureMap re-exports these)
+TEMP_COLD = 0
+TEMP_WARM = 1
+TEMP_HOT = 2
+
 KIND_KEY = "k"
 KIND_VALUE = "v"
 
@@ -58,7 +64,7 @@ class SSTable:
     def __init__(self, cfg: EngineConfig, kind: str, layout: str,
                  keys: np.ndarray, seqs: np.ndarray, etype: np.ndarray,
                  vids: np.ndarray, vsizes: np.ndarray, vfiles: np.ndarray,
-                 is_hot: bool = False):
+                 is_hot: bool = False, temperature: int | None = None):
         assert kind in (KIND_KEY, KIND_VALUE)
         n = len(keys)
         self.fid = self.alloc_fid()
@@ -66,6 +72,10 @@ class SSTable:
         self.kind = kind
         self.layout = layout
         self.is_hot = is_hot
+        # temperature class (adaptive engines: TEMP_COLD/WARM/HOT); the
+        # binary is_hot flag maps to the extremes when not given explicitly
+        self.temperature = (TEMP_HOT if is_hot else TEMP_COLD) \
+            if temperature is None else int(temperature)
         self.keys = np.asarray(keys, np.uint64)
         self.seqs = np.asarray(seqs, np.uint64)
         self.etype = np.asarray(etype, np.uint8)
@@ -197,8 +207,9 @@ def build_ksst(cfg: EngineConfig, keys, seqs, etype, vids, vsizes, vfiles):
 
 
 def build_vsst(cfg: EngineConfig, keys, seqs, vids, vsizes,
-               is_hot: bool = False):
+               is_hot: bool = False, temperature: int | None = None):
     n = len(keys)
     return SSTable(cfg, KIND_VALUE, cfg.vsst_layout, keys, seqs,
                    np.zeros(n, np.uint8), vids, vsizes,
-                   np.zeros(n, np.int64), is_hot=is_hot)
+                   np.zeros(n, np.int64), is_hot=is_hot,
+                   temperature=temperature)

@@ -39,9 +39,33 @@ class EngineStrategy:
     lazy_read: bool = False
     index_decoupled: bool = False
     hotcold_write: bool = False
+    adaptive_enabled: bool = False    # workload tracker (core/adaptive/)
 
     def __init__(self, cfg):
         self.cfg = cfg
+
+    # ============================================== workload observation
+    def observe_batch(self, store, kind: str, keys, vsizes=None) -> None:
+        """Foreground-traffic observation hook, called once per columnar
+        batch from the write path (``kind="write"``, puts *and* deletes —
+        both end a value's lifetime) and ``multi_get`` (``kind="read"``).
+        Observation is modeling state only: it must cost no simulated
+        device time.  Default: no tracking."""
+
+    def gc_candidate_score(self, store, t) -> float:
+        """Score of one vSST as a GC candidate; compared against the GC
+        threshold for eligibility and used to rank candidates (and, via the
+        ``FleetScheduler``, GC jobs fleet-wide).  Default: the raw garbage
+        ratio — the static-threshold policy of the paper engines.  Adaptive
+        engines fold in predicted dead-byte yield (``adaptive/engine.py``)."""
+        return t.garbage_ratio()
+
+    def rewrite_temperature(self, store, keys) -> np.ndarray | None:
+        """Temperature class per record (TEMP_COLD/WARM/HOT) for vSST
+        construction, or None to fall back to the binary DropCache hot/cold
+        split (``cfg.hotcold_write``).  Drives temperature-partitioned
+        vSSTs in ``values/build.py``."""
+        return None
 
     # ==================================================== flush separation
     def separation_mask(self, store, keys: np.ndarray, ety: np.ndarray,

@@ -34,9 +34,18 @@ from .values.resolve import GCGroup, resolve_value_fids   # noqa: F401
 
 
 def gc_candidates(store, threshold: float) -> list[SSTable]:
+    """Eligible candidate vSSTs, best first.
+
+    Eligibility and ranking go through the engine strategy's
+    ``gc_candidate_score`` — the raw garbage ratio for the paper engines
+    (static-threshold policy), predicted dead-byte yield for
+    ``scavenger_adaptive`` (DESIGN.md §8)."""
+    strat = store.strategy
+    scores = {t.fid: strat.gc_candidate_score(store, t)
+              for t in store.version.value_files.values() if t.n > 0}
     cands = [t for t in store.version.value_files.values()
-             if t.garbage_ratio() >= threshold and t.n > 0]
-    cands.sort(key=lambda t: t.garbage_ratio(), reverse=True)
+             if t.n > 0 and scores[t.fid] >= threshold]
+    cands.sort(key=lambda t: scores[t.fid], reverse=True)
     return cands
 
 

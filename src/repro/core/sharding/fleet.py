@@ -141,8 +141,10 @@ class FleetScheduler:
 
     def _pick_gc(self):
         """-> (shard_idx, job) or None.  Jobs rank by the shard's top
-        candidate garbage ratio (reclaimed bytes per lane time), plus
-        starvation aging."""
+        candidate GC score — the engine strategy's ``gc_candidate_score``:
+        raw garbage ratio (reclaimed bytes per lane time) for the paper
+        engines, tracker-driven predicted dead-byte yield for
+        ``scavenger_adaptive`` — plus starvation aging."""
         shards = self.shards
         aggressive = self.over_soft_quota()
         if self.policy == "round_robin":
@@ -161,7 +163,7 @@ class FleetScheduler:
             if not cands:
                 continue
             eligible.append(i)
-            prio = (cands[0].garbage_ratio()
+            prio = (s.strategy.gc_candidate_score(s, cands[0])
                     + self.aging_rate * self.gc_wait[i])
             if best is None or prio > best_prio:
                 best, best_prio, best_cands = i, prio, cands

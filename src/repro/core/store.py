@@ -1,8 +1,9 @@
-"""KVStore facade: six selectable engines over one layered substrate.
+"""KVStore facade: seven selectable engines over one layered substrate.
 
 ``Store(EngineConfig(engine=...))`` gives RocksDB-, BlobDB-, Titan-,
-TerarkDB-, Scavenger- or hybrid-semantics over the same deterministic
-simulated device, so every paper comparison is apples-to-apples.
+TerarkDB-, Scavenger-, hybrid- or adaptive-Scavenger-semantics over the
+same deterministic simulated device, so every paper comparison is
+apples-to-apples.
 
 The facade owns scheduling and the write path; everything else is layered
 (DESIGN.md §7):
@@ -145,6 +146,9 @@ class Store(ScalarOps):
             self.in_batch_write = False
 
         self.latest.apply_batch(is_put, keys, vids_out, vsz)
+        # workload observation (adaptive tracker; no-op for paper engines,
+        # costs no simulated time)
+        self.strategy.observe_batch(self, "write", keys, vsz)
         self._after_write(total)
         return vids_out
 
@@ -170,6 +174,7 @@ class Store(ScalarOps):
                                         res["vfile"][refs],
                                         res["vsize"][refs], sio.CAT_FG_READ,
                                         strict=True)
+        self.strategy.observe_batch(self, "read", keys)
         self.pump()
         return {"found": live,
                 "vid": np.where(live, res["vid"], 0).astype(np.uint64),

@@ -1,15 +1,27 @@
 """vSST construction: cut sorted value records into target-size files,
-hot/cold-split when the engine's write policy asks for it (§III-B.3)."""
+temperature-partitioned when the engine's write policy asks for it.
+
+Partitioning policy, in precedence order:
+
+  * ``EngineStrategy.rewrite_temperature`` (adaptive engines, DESIGN.md §8)
+    — three-way hot/warm/cold classes from the decayed write-rate tracker,
+    applied at flush separation *and* GC rewrite: hot records group with
+    hot records (their files turn to garbage together), cold records stop
+    riding along through rewrite after rewrite.
+  * ``cfg.hotcold_write`` (Scavenger §III-B.3) — binary DropCache split.
+  * neither — one undifferentiated stream.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..engine.tables import SSTable, build_vsst
+from ..engine.tables import (TEMP_COLD, TEMP_HOT, TEMP_WARM, SSTable,
+                             build_vsst)
 
 
 def build_value_files(store, keys, vids, vsizes, cat: str):
-    """Build vSST(s) from sorted records, hot/cold-split when enabled.
+    """Build vSST(s) from sorted records, temperature-split when enabled.
 
     Returns (files, fid_per_record)."""
     cfg = store.cfg
@@ -18,12 +30,15 @@ def build_value_files(store, keys, vids, vsizes, cat: str):
     files: list[SSTable] = []
     if n == 0:
         return files, fid_per_rec
-    if cfg.hotcold_write:
+    temps = store.strategy.rewrite_temperature(store, keys)
+    if temps is not None:
+        classes = [(temps == c, c) for c in (TEMP_HOT, TEMP_WARM, TEMP_COLD)]
+    elif cfg.hotcold_write:
         hot = store.dropcache.is_hot(keys)
-        classes = [(hot, True), (~hot, False)]
+        classes = [(hot, TEMP_HOT), (~hot, TEMP_COLD)]
     else:
-        classes = [(np.ones(n, bool), False)]
-    for mask, is_hot in classes:
+        classes = [(np.ones(n, bool), TEMP_COLD)]
+    for mask, temp in classes:
         idx = np.nonzero(mask)[0]
         if len(idx) == 0:
             continue
@@ -34,7 +49,8 @@ def build_value_files(store, keys, vids, vsizes, cat: str):
             m = idx[fno == f]
             t = build_vsst(cfg, keys[m], np.full(len(m), store.seq,
                                                  np.uint64),
-                           vids[m], vsizes[m], is_hot=is_hot)
+                           vids[m], vsizes[m], is_hot=temp == TEMP_HOT,
+                           temperature=temp)
             store.version.add_value_file(t)
             store.io.seq_write(t.file_bytes, cat)
             fid_per_rec[m] = t.fid

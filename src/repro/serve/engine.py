@@ -94,7 +94,8 @@ class ServeEngine:
                     req.done = True
                     raise ValueError(
                         f"request id {req.rid} already admitted")
-                if not self.pager.admit(req.rid, need, hot=req.hot):
+                if not self.pager.admit(req.rid, need,
+                                        hot=self._admit_hot(req)):
                     break                  # HBM full: wait for GC headroom
                 self.queue.pop(0)
                 admitted.append((req.rid, need))
@@ -113,6 +114,33 @@ class ServeEngine:
                 rids = np.array([a[0] for a in admitted], np.uint64)
                 sizes = np.array([a[1] * 16 for a in admitted], np.int64)
                 self.meta.write(WriteBatch().puts(rids, sizes))
+
+    def _admit_hot(self, req: Request) -> bool:
+        """Hot/cold extent placement for a request's pages.
+
+        With ``meta_engine="scavenger_adaptive"`` the metadata store's
+        workload tracker has seen every admission/retirement write for this
+        rid: a rid whose metadata churns (re-submitted short bursty
+        requests) classifies hot, long-lived rids cool off to cold extents
+        — the serving tier consumes the same temperature signal that drives
+        vSST segregation.  Falls back to the caller's ``req.hot`` hint when
+        the meta store has no tracker (default engines, sharded meta)."""
+        tempmap = getattr(getattr(self.meta, "strategy", None),
+                          "tempmap", None)
+        if tempmap is None:
+            return req.hot
+        rid = np.array([req.rid], np.uint64)
+        if tempmap.tracker.write_rate(rid)[0] < 1.0:
+            # no evidence for this rid: its metadata write happens after
+            # admission, so a first-time rid has no observations — the
+            # caller's hint stands.  The < 1.0 bar (one undecayed
+            # observation) also filters decayed sketch-collision noise;
+            # a fresh full-count collision can still masquerade as
+            # evidence — an accepted sketch trade-off for a placement
+            # hint that only steers extent locality, never correctness.
+            return req.hot
+        from repro.core.adaptive import TEMP_WARM
+        return bool(tempmap.classify(rid)[0] >= TEMP_WARM)
 
     def _single(self, slot: int, token: int, sample: bool = False) -> None:
         b = np.zeros((self.slots, 1), np.int32)

@@ -1,7 +1,8 @@
-from .generator import (Fixed, Mixed, Pareto, Runner, UniformKeys,
-                        WorkloadSpec, ZipfKeys, fixed, mixed_8k, pareto_1k)
+from .generator import (Fixed, HotspotKeys, Mixed, Pareto, Runner,
+                        UniformKeys, WorkloadSpec, ZipfKeys, fixed, mixed_8k,
+                        pareto_1k)
 from .ycsb import run_ycsb, YCSB_MIX
 
-__all__ = ["Fixed", "Mixed", "Pareto", "Runner", "UniformKeys",
-           "WorkloadSpec", "ZipfKeys", "fixed", "mixed_8k", "pareto_1k",
-           "run_ycsb", "YCSB_MIX"]
+__all__ = ["Fixed", "HotspotKeys", "Mixed", "Pareto", "Runner",
+           "UniformKeys", "WorkloadSpec", "ZipfKeys", "fixed", "mixed_8k",
+           "pareto_1k", "run_ycsb", "YCSB_MIX"]

@@ -136,6 +136,43 @@ class UniformKeys:
         return rng.integers(0, self.n, m)
 
 
+class HotspotKeys:
+    """Shifting-hotspot distribution (adaptive-GC stressor, DESIGN.md §8).
+
+    ``hot_frac`` of ops hit a contiguous hot set of ``hot_n`` keys; the rest
+    are uniform over the whole keyspace.  Every ``shift_every`` sampled ops
+    the hotspot relocates to a pseudorandom position (``splitmix64`` of the
+    phase number — deterministic given the seed), so write hotness is
+    *non-stationary*: trackers that never decay keep heating retired
+    hotspots, and static policies keep rewriting values that stopped dying.
+    Vectorized: phase assignment and hot-set offsets are pure array math.
+    """
+
+    def __init__(self, n: int, hot_n: int | None = None,
+                 hot_frac: float = 0.9, shift_every: int = 10_000,
+                 seed: int = 0):
+        self.n = int(n)
+        self.hot_n = int(hot_n) if hot_n is not None else max(1, self.n // 50)
+        if self.hot_n < 1:
+            raise ValueError(f"hot_n must be >= 1, got {self.hot_n}")
+        self.hot_frac = float(hot_frac)
+        self.shift_every = max(1, int(shift_every))
+        self.seed = np.uint64(seed * 0x9E3779B9 + 7)
+        self._i = 0         # ops sampled so far (drives the phase)
+
+    def sample(self, rng: np.random.Generator, m: int) -> np.ndarray:
+        from repro.core.engine.keys import splitmix64
+        idx = self._i + np.arange(m, dtype=np.int64)
+        self._i += m
+        phase = (idx // self.shift_every).astype(np.uint64)
+        start = splitmix64(phase ^ self.seed) % np.uint64(self.n)
+        is_hot = rng.random(m) < self.hot_frac
+        off = rng.integers(0, self.hot_n, m).astype(np.uint64)
+        hot_keys = (start + off) % np.uint64(self.n)
+        uni = rng.integers(0, self.n, m).astype(np.uint64)
+        return np.where(is_hot, hot_keys, uni).astype(np.int64)
+
+
 @dataclasses.dataclass
 class WorkloadSpec:
     """A scaled version of the paper's load/update/read/scan procedure."""
@@ -175,13 +212,17 @@ class Runner:
     updates column-wise with the same last-write-wins semantics the store
     applies inside a batch.  ``batch=1`` degenerates to the scalar loop."""
 
-    def __init__(self, store, spec: WorkloadSpec, batch: int = 256):
+    def __init__(self, store, spec: WorkloadSpec, batch: int = 256,
+                 key_gen=None):
         self.store = store
         self.spec = spec
         self.batch = max(1, int(batch))
         self.rng = np.random.default_rng(spec.seed)
-        self.keys = (ZipfKeys(spec.n_keys, spec.zipf_theta, spec.seed)
-                     if spec.zipf_theta else UniformKeys(spec.n_keys))
+        # key_gen overrides the spec's default update/read key distribution
+        # (e.g. HotspotKeys for the shifting-hotspot benchmark)
+        self.keys = key_gen if key_gen is not None else (
+            ZipfKeys(spec.n_keys, spec.zipf_theta, spec.seed)
+            if spec.zipf_theta else UniformKeys(spec.n_keys))
         self.oracle: dict[int, int] = {}
 
     # ------------------------------------------------------------- batching

@@ -1,0 +1,268 @@
+"""Adaptive subsystem tests (DESIGN.md §8).
+
+Property tests (hypothesis, optional via ``_hypothesis_support``):
+
+  * the decayed count-min sketch never under-counts against an exact
+    oracle when decay is off (conservative estimates);
+  * decay is monotone: advancing the op clock without adding events can
+    only lower estimates.
+
+Plus unit coverage of the lifetime estimator and temperature map, golden
+parity locking ``scavenger_adaptive`` with the tracker disabled to the
+``scavenger`` pre-refactor golden (and the five paper engines stay locked
+by ``test_refactor_parity.py`` — they never construct a tracker), and a
+smoke check of the ISSUE 4 acceptance gate against the titan baseline.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_support import HealthCheck, given, settings, st
+from test_refactor_parity import (FLOAT_FIELDS, GOLDENS, INT_FIELDS,
+                                  run_fixed_workload)
+
+from repro.core import EngineConfig, Store, WriteBatch
+from repro.core.adaptive import (TEMP_COLD, TEMP_HOT, AccessTracker,
+                                 DecaySketch, LifetimeEstimator,
+                                 TemperatureMap)
+
+
+def tiny_cfg(engine, **kw):
+    base = dict(
+        memtable_bytes=4 << 10, ksst_bytes=4 << 10, vsst_bytes=16 << 10,
+        base_level_bytes=8 << 10, cache_bytes=8 << 10, dropcache_keys=64,
+        sep_threshold=256, max_levels=5)
+    base.update(kw)
+    return EngineConfig(engine=engine, **base)
+
+
+# ========================================================== sketch properties
+keys_strategy = st.lists(st.integers(min_value=0, max_value=1 << 20),
+                         min_size=1, max_size=300)
+
+
+@settings(max_examples=50, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(keys=keys_strategy, width=st.integers(16, 256),
+       depth=st.integers(1, 4))
+def test_sketch_never_undercounts_vs_exact_oracle(keys, width, depth):
+    """Without decay, estimate(k) >= exact count for every key (count-min
+    collisions over-count, never under-count)."""
+    sk = DecaySketch(width, depth, half_life=None)
+    ks = np.array(keys, np.uint64)
+    sk.add(ks)
+    exact = {}
+    for k in keys:
+        exact[k] = exact.get(k, 0) + 1
+    uniq = np.array(sorted(exact), np.uint64)
+    est = sk.estimate(uniq)
+    for k, e in zip(uniq.tolist(), est.tolist()):
+        assert e >= exact[k] - 1e-9
+
+
+@settings(max_examples=50, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(keys=keys_strategy, half_life=st.floats(1.0, 1e6),
+       steps=st.lists(st.floats(0.0, 1e5), min_size=1, max_size=8))
+def test_sketch_decay_is_monotone(keys, half_life, steps):
+    """Advancing the clock without adds can only lower every estimate."""
+    sk = DecaySketch(64, 2, half_life=half_life)
+    ks = np.array(keys, np.uint64)
+    sk.add(ks)
+    clock = 0.0
+    prev = sk.estimate(ks)
+    for d in steps:
+        clock += d
+        sk.decay_to(clock)
+        cur = sk.estimate(ks)
+        assert np.all(cur <= prev + 1e-9)
+        assert np.all(cur >= 0)
+        prev = cur
+
+
+def test_sketch_estimates_are_decayed_counts():
+    sk = DecaySketch(128, 2, half_life=100.0)
+    k = np.array([7], np.uint64)
+    sk.add(np.repeat(k, 8))
+    assert sk.estimate(k)[0] == pytest.approx(8.0)
+    sk.decay_to(100.0)          # one half-life
+    assert sk.estimate(k)[0] == pytest.approx(4.0)
+    assert sk.total_mass() == pytest.approx(4.0)
+
+
+def test_sketch_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        DecaySketch(0, 1)
+    with pytest.raises(ValueError):
+        DecaySketch(16, 0)
+
+
+# ============================================================ lifetime model
+def test_lifetime_mean_interval_tracks_update_cadence():
+    est = LifetimeEstimator(64, half_life=None)
+    fast, slow = np.array([1], np.int64), np.array([2], np.int64)
+    now = 0.0
+    for i in range(64):
+        now += 10
+        est.observe(fast, now)              # every 10 ops
+        if i % 8 == 7:
+            est.observe(slow, now)          # every 80 ops
+    mf = est.mean_interval(fast)[0]
+    ms = est.mean_interval(slow)[0]
+    assert mf < ms
+    assert 8 <= mf <= 32                    # log2 buckets: coarse but sane
+    assert 48 <= ms <= 192
+
+
+def test_lifetime_residual_grows_once_overdue():
+    """A group that stops updating must stop predicting imminent death
+    (the Lindy turn: residual grows with age past the mean interval)."""
+    est = LifetimeEstimator(16, half_life=None)
+    g = np.array([3], np.int64)
+    now = 0.0
+    for _ in range(32):
+        now += 10
+        est.observe(g, now)
+    fresh = est.residual(g, now)[0]
+    overdue = est.residual(g, now + 1000)[0]
+    assert overdue > 10 * fresh
+    # unknown group -> infinite residual (treated as cold, never deferred)
+    assert est.residual(np.array([9], np.int64), now)[0] == np.inf
+
+
+# ========================================================== temperature map
+def test_temperature_classifies_zipf_head_hot_tail_cold():
+    cfg = EngineConfig(engine="scavenger_adaptive",
+                       adaptive_half_life_ops=1e9)
+    tr = AccessTracker.from_config(cfg)
+    rng = np.random.default_rng(7)
+    hot = rng.integers(0, 8, 4000).astype(np.uint64)          # 8 hot keys
+    cold = np.arange(100, 1100, dtype=np.uint64)              # 1000 singles
+    tr.observe_writes(hot)
+    tr.observe_writes(cold)
+    tm = TemperatureMap(tr, hot_mult=4.0, cold_mult=0.5)
+    t_hot = tm.classify(np.arange(8, dtype=np.uint64))
+    t_cold = tm.classify(cold[:64])
+    assert np.all(t_hot == TEMP_HOT)
+    assert np.all(t_cold == TEMP_COLD)
+
+
+def test_temperature_map_rejects_bad_cutpoints():
+    cfg = EngineConfig(engine="scavenger_adaptive")
+    tr = AccessTracker.from_config(cfg)
+    with pytest.raises(ValueError):
+        TemperatureMap(tr, hot_mult=1.0, cold_mult=2.0)
+
+
+# ====================================================== config validation
+def test_adaptive_flag_defaults_resolve_from_registry():
+    assert EngineConfig(engine="scavenger_adaptive").adaptive_enabled
+    for e in ("rocksdb", "blobdb", "titan", "terarkdb", "scavenger",
+              "hybrid"):
+        assert not EngineConfig(engine=e).adaptive_enabled
+    # explicit override wins over the registry default
+    cfg = EngineConfig(engine="scavenger_adaptive", adaptive_enabled=False)
+    assert not cfg.adaptive_enabled
+    assert Store(cfg).strategy.tracker is None
+    # enabling tracking on a strategy without a tracker is rejected, not a
+    # silent no-op
+    with pytest.raises(ValueError, match="does not support"):
+        EngineConfig(engine="titan", adaptive_enabled=True)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(adaptive_groups=0), dict(adaptive_sketch_width=0),
+    dict(adaptive_sketch_depth=0), dict(adaptive_half_life_ops=0.0),
+    dict(adaptive_gc_horizon_ops=-1.0), dict(adaptive_defer_weight=1.5),
+    dict(adaptive_defer_weight=-0.1),
+    dict(temp_hot_mult=0.5, temp_cold_mult=0.5),
+])
+def test_adaptive_config_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        EngineConfig(engine="scavenger_adaptive", **bad)
+
+
+def test_scaled_sizes_adaptive_windows_from_keyspace():
+    cfg = EngineConfig.scaled("scavenger_adaptive", 32 << 20, est_keys=50_000)
+    assert cfg.adaptive_half_life_ops == 100_000
+    assert cfg.adaptive_gc_horizon_ops == 50_000
+
+
+# ============================================================ golden parity
+def test_adaptive_engine_tracker_off_matches_scavenger_golden():
+    """``scavenger_adaptive`` with the tracker disabled must be
+    byte-identical to plain ``scavenger`` (every hook falls back to the
+    inherited default), locked against the pre-refactor golden."""
+    got = run_fixed_workload("scavenger_adaptive", adaptive_enabled=False)
+    want = GOLDENS["scavenger"]
+    for f in INT_FIELDS:
+        assert got[f] == want[f], f"{f}: {got[f]} != {want[f]}"
+    for f in FLOAT_FIELDS:
+        assert math.isclose(got[f], want[f], rel_tol=1e-9, abs_tol=1e-12), \
+            f"{f}: {got[f]} != {want[f]}"
+
+
+# ==================================================== end-to-end behaviour
+def test_temperature_partitioned_vssts_on_skewed_writes():
+    """Hot-key churn lands in hot vSSTs, the cold bulk in cold vSSTs."""
+    cfg = tiny_cfg("scavenger_adaptive", adaptive_half_life_ops=1e6)
+    s = Store(cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        hot = rng.integers(0, 4, 48).astype(np.uint64)       # 4 hot keys
+        cold = rng.integers(4, 2000, 16).astype(np.uint64)
+        keys = np.concatenate([hot, cold])
+        s.write(WriteBatch().puts(keys, np.full(len(keys), 600)))
+    s.flush()
+    temps = {t.temperature for t in s.version.value_files.values()}
+    assert TEMP_HOT in temps and TEMP_COLD in temps
+    # hot files hold only head keys
+    for t in s.version.value_files.values():
+        if t.temperature == TEMP_HOT:
+            assert t.keys.max() < 4
+
+
+def test_adaptive_store_keeps_dict_semantics():
+    """Observation and adaptive GC must not corrupt reads."""
+    s = Store(tiny_cfg("scavenger_adaptive", gc_garbage_ratio=0.05))
+    oracle = {}
+    rng = np.random.default_rng(11)
+    for _ in range(6):
+        for k in range(40):
+            if rng.random() < 0.7:
+                oracle[k] = s.put(k, int(rng.choice([64, 700, 1500, 4000])))
+        s.flush()
+    assert s.n_gc_runs > 0
+    assert s.strategy.tracker.ops > 0
+    for k, v in oracle.items():
+        assert s.get(k) == v
+
+
+def test_adaptive_beats_titan_on_skewed_smoke():
+    """Compressed version of the ISSUE 4 acceptance gate
+    (``benchmarks/adaptive_gc.py`` runs the full version): on a skewed
+    update stream, scavenger_adaptive must reclaim with less GC rewrite
+    traffic than the titan writeback baseline at equal-or-better
+    space amplification."""
+    from repro.core.engine import io as sio
+    from repro.workloads import Runner, pareto_1k
+
+    spec = pareto_1k(8 << 20)
+
+    def measure(engine):
+        cfg = EngineConfig.scaled(engine, spec.dataset_bytes,
+                                  est_keys=spec.n_keys)
+        s = Store(cfg)
+        r = Runner(s, spec, batch=256)
+        r.load()
+        r.update()
+        gcw = (s.io.write_bytes.get(sio.CAT_GC_WRITE, 0)
+               + s.io.write_bytes.get(sio.CAT_GC_WRITE_INDEX, 0))
+        return gcw, s.space_amplification()
+
+    titan_gc, titan_sa = measure("titan")
+    adapt_gc, adapt_sa = measure("scavenger_adaptive")
+    assert adapt_gc < titan_gc
+    assert adapt_sa <= titan_sa

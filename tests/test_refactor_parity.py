@@ -31,12 +31,14 @@ N_KEYS = 4096
 VSIZES = np.array([64, 200, 600, 2000, 9000], np.int64)
 
 
-def run_fixed_workload(engine: str) -> dict:
+def run_fixed_workload(engine: str, **overrides) -> dict:
     """Deterministic mixed workload: seeded writes, deletes, point reads and
-    scans, then a full drain.  Every engine sees the identical op stream."""
+    scans, then a full drain.  Every engine sees the identical op stream.
+    ``overrides`` pass through to ``EngineConfig.scaled`` (used by
+    ``tests/test_adaptive.py`` to lock the tracker-off parity)."""
     from repro.core import WriteBatch
 
-    cfg = EngineConfig.scaled(engine, 8 << 20, est_keys=N_KEYS)
+    cfg = EngineConfig.scaled(engine, 8 << 20, est_keys=N_KEYS, **overrides)
     store = Store(cfg)
     rng = np.random.default_rng(1234)
     for _ in range(6):
