@@ -15,4 +15,4 @@ lint:
 
 bench-smoke:
 	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api read_path \
-		sharding adaptive_gc fig02_tradeoff
+		sharding adaptive_gc recovery fig02_tradeoff

@@ -95,6 +95,12 @@ def row(name: str, us: float, **derived) -> dict:
 TRAJECTORY_FILE = "BENCH_adaptive.json"
 
 
+def trajectory_path(filename: str) -> str:
+    """Repo-root path for a named trajectory file (``BENCH_*.json``)."""
+    return os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), filename)
+
+
 def persist_trajectory(section: str, rows: list[dict],
                        path: str | None = None) -> str:
     """Append one benchmark run to the repo-root ``BENCH_adaptive.json``
@@ -108,10 +114,8 @@ def persist_trajectory(section: str, rows: list[dict],
     import json
 
     if path is None:
-        path = os.environ.get(
-            "REPRO_BENCH_TRAJECTORY",
-            os.path.join(os.path.dirname(os.path.dirname(
-                os.path.abspath(__file__))), TRAJECTORY_FILE))
+        path = os.environ.get("REPRO_BENCH_TRAJECTORY",
+                              trajectory_path(TRAJECTORY_FILE))
     try:
         with open(path) as f:
             data = json.load(f)

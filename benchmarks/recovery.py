@@ -1,0 +1,132 @@
+"""Recovery benchmark: restart time vs WAL length vs checkpoint interval.
+
+A durable store (``Store(cfg, durability_dir=...)`` — or a
+``ShardedStore`` fleet under ``REPRO_SHARDS``) runs the paper's standard
+load + update procedure, checkpointing every ``ckpt_every`` update chunks
+(0 = never: recovery replays the entire op journal).  The store is then
+recovered with ``Store.open`` / ``ShardedStore.open`` (MANIFEST-then-WAL,
+DESIGN.md §9) and the row reports:
+
+  * ``us_per_call``   — simulated us per update of the *original* run
+    (the CSV contract's figure; durability must not move it),
+  * ``derived``       — wall-clock recovery time, journal records
+    replayed, checkpoint count, snapshot size, and ``match``: 1 when the
+    recovered ``stats()`` dict equals the live store's byte-for-byte (the
+    §9 recovery contract).
+
+More frequent checkpoints → shorter WAL tail → faster recovery but more
+snapshot bytes written: the durability space-time trade-off.  Rows append
+to the repo-root ``BENCH_recovery.json`` trajectory
+(``benchmarks.common.persist_trajectory``).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import EngineConfig, ShardedStore, Store
+from repro.core.durability import Durability, read_manifest, read_wal
+from repro.workloads import Runner, pareto_1k
+
+from .common import (batch_size, ds_bytes, persist_trajectory, row,
+                     scale_name, shard_count, shard_policy, trajectory_path)
+
+N_CHUNKS = 8
+TRAJECTORY = "BENCH_recovery.json"
+
+
+def _journal_tail(root: Path) -> tuple[int, int]:
+    """(records in the segments recovery replays, checkpoint count)."""
+    edits = read_manifest(root / Durability.MANIFEST)
+    ckpt_kinds = ("checkpoint", "fleet_checkpoint")
+    wal_from = 0
+    n_ckpts = 0
+    for e in edits:
+        if e.kind in ckpt_kinds:
+            n_ckpts += 1
+            wal_from = int(e.data["wal_epoch"])
+    n = sum(len(read_wal(root / e.data["file"])) for e in edits
+            if e.kind == "wal_segment" and int(e.data["epoch"]) >= wal_from)
+    return n, n_ckpts
+
+
+def _snapshot_bytes(root: Path) -> int:
+    return sum(p.stat().st_size for p in root.rglob("snap-*.ckpt"))
+
+
+def _one(engine: str, ckpt_every: int) -> dict:
+    spec = pareto_1k(ds_bytes(8))
+    tmp = Path(tempfile.mkdtemp(prefix="repro-recovery-"))
+    try:
+        shards = shard_count()
+        if shards > 1:
+            cfg = EngineConfig.scaled(engine, spec.dataset_bytes // shards,
+                                      est_keys=max(64,
+                                                   spec.n_keys // shards))
+            store = ShardedStore(cfg, n_shards=shards,
+                                 shard_policy=shard_policy(),
+                                 key_space=spec.n_keys, durability_dir=tmp)
+            opener = ShardedStore.open
+        else:
+            cfg = EngineConfig.scaled(engine, spec.dataset_bytes,
+                                      est_keys=spec.n_keys)
+            store = Store(cfg, durability_dir=tmp)
+            opener = Store.open
+        r = Runner(store, spec, batch=batch_size())
+        r.load()
+        t0 = store.io.clock_us
+        per = max(1, spec.n_updates // N_CHUNKS)
+        for i in range(N_CHUNKS):
+            r.update(per)
+            # never checkpoint after the last chunk: the replayed WAL tail
+            # is the ops since the last checkpoint, so the sweep shows the
+            # recovery-time vs snapshot-bytes trade-off
+            if ckpt_every and (i + 1) % ckpt_every == 0 \
+                    and i + 1 < N_CHUNKS:
+                store.checkpoint()
+        us_sim = (store.io.clock_us - t0) / (per * N_CHUNKS)
+        live = store.stats()
+        store.close()
+
+        wal_records, n_ckpts = _journal_tail(tmp)
+        t0 = time.perf_counter()
+        recovered = opener(tmp)
+        recover_s = time.perf_counter() - t0
+        match = int(recovered.stats() == live)
+        recovered.close()
+        return {
+            "us_sim": us_sim,
+            "recover_ms": recover_s * 1e3,
+            "wal_records": wal_records,
+            "n_ckpts": n_ckpts,
+            "snap_mb": _snapshot_bytes(tmp) / 2**20,
+            "match": match,
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(scale: str | None = None) -> list[dict]:
+    engines = ("scavenger",) if scale_name() == "quick" \
+        else ("scavenger", "titan", "scavenger_adaptive")
+    rows = []
+    for engine in engines:
+        for ckpt_every in (0, 4, 2, 1):      # 0 = replay the whole journal
+            m = _one(engine, ckpt_every)
+            rows.append(row(
+                f"recovery/{engine}/ckpt_every_{ckpt_every or 'never'}",
+                m["us_sim"],
+                recover_ms=m["recover_ms"], wal_records=m["wal_records"],
+                n_ckpts=m["n_ckpts"], snap_mb=m["snap_mb"],
+                match=m["match"]))
+            assert m["match"] == 1, \
+                f"recovered stats diverged for {engine}/{ckpt_every}"
+    # honor the same env override every trajectory writer respects
+    persist_trajectory("recovery", rows,
+                       path=os.environ.get("REPRO_BENCH_TRAJECTORY",
+                                           trajectory_path(TRAJECTORY)))
+    return rows

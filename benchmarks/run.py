@@ -1,13 +1,14 @@
 """Benchmark harness entrypoint — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_SCALE=quick|full.
-Select modules: python -m benchmarks.run [--shards N]
+Select modules: python -m benchmarks.run [--list] [--shards N]
 [--shard-policy {hash,range}] [module ...]
 """
 
 from __future__ import annotations
 
 import argparse
+import ast
 import os
 import time
 import traceback
@@ -17,20 +18,48 @@ MODULES = [
     "fig12_micro", "fig13_ycsb", "fig14_nolimit", "fig16_features",
     "fig17_ablation_space", "fig19_workloads", "fig20_space_limits",
     "table1_space_overhead", "batch_api", "read_path", "sharding",
-    "adaptive_gc", "kernels_bench",
+    "adaptive_gc", "recovery", "kernels_bench",
     "serving_cache", "checkpoint_store", "roofline",
 ]
+
+
+def describe(name: str) -> str:
+    """First docstring line of a benchmark module (AST parse: listing must
+    not import heavyweight dependencies like jax)."""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"{name}.py")
+    try:
+        with open(path) as f:
+            doc = ast.get_docstring(ast.parse(f.read())) or ""
+    except (OSError, SyntaxError):
+        return "(no description)"
+    return doc.strip().splitlines()[0] if doc.strip() else "(no description)"
+
+
+def list_modules() -> None:
+    width = max(len(n) for n in MODULES)
+    try:
+        for name in MODULES:
+            print(f"{name:<{width}}  {describe(name)}")
+    except BrokenPipeError:            # `--list | head` closed the pipe
+        os._exit(0)
 
 
 def main() -> None:
     import importlib
     ap = argparse.ArgumentParser()
     ap.add_argument("modules", nargs="*", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark modules with one-line "
+                         "descriptions and exit")
     ap.add_argument("--shards", type=int, default=None,
                     help="run workloads against a ShardedStore of N shards")
     ap.add_argument("--shard-policy", choices=("hash", "range"),
                     default=None)
     args = ap.parse_args()
+    if args.list:
+        list_modules()
+        return
     if args.shards is not None:
         os.environ["REPRO_SHARDS"] = str(args.shards)
     if args.shard_policy is not None:

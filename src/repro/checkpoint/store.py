@@ -18,8 +18,11 @@ Scavenger mechanics carried over 1:1 — on real files:
   * Space-aware throttling (§III-D): saves block on aggressive GC when the
     quota is hit.
 
-Crash safety: records are CRC-checked; the manifest is an append-only log
-replayed on open; value logs are fsync'd before their manifest entries.
+Crash safety: records are CRC-checked in the repo-wide durability framing
+(``repro.core.durability.records`` — the same ``(crc32, key_len, val_len)``
+record log the core's WAL/MANIFEST/snapshots use, DESIGN.md §9); the
+manifest is an append-only log replayed on open; value logs are fsync'd
+before their manifest entries.
 """
 
 from __future__ import annotations
@@ -27,10 +30,11 @@ from __future__ import annotations
 import json
 import os
 import struct
-import zlib
 from pathlib import Path
 
-_REC_HDR = struct.Struct("<IIQ")          # crc32, key_len, val_len
+from repro.core.durability.records import (REC_HDR as _REC_HDR,
+                                           append_record, read_record,
+                                           scan_records)
 
 
 class ValueLog:
@@ -45,13 +49,8 @@ class ValueLog:
         self._fh = open(path, "ab")
 
     def append(self, key: str, data: bytes) -> None:
-        kb = key.encode()
-        crc = zlib.crc32(kb + data)
         off = self._fh.tell()
-        self._fh.write(_REC_HDR.pack(crc, len(kb), len(data)))
-        self._fh.write(kb)
-        self._fh.write(data)
-        rec_len = _REC_HDR.size + len(kb) + len(data)
+        rec_len = append_record(self._fh, key, data)
         self.index[key] = (off, rec_len)
         self.bytes += rec_len
 
@@ -61,13 +60,10 @@ class ValueLog:
         off, rec_len = self.index[key]
         with open(self.path, "rb") as f:
             f.seek(off)
-            hdr = f.read(_REC_HDR.size)
-            crc, klen, vlen = _REC_HDR.unpack(hdr)
-            kb = f.read(klen)
-            data = f.read(vlen)
-        if zlib.crc32(kb + data) != crc:
+            rec = read_record(f)      # CRC-verified shared framing
+        if rec is None:
             raise IOError(f"checksum mismatch for {key} in {self.path}")
-        return data
+        return rec[1]
 
     def seal(self) -> None:
         """Write the dense footer index and close for appends."""
@@ -87,22 +83,10 @@ class ValueLog:
         first torn record, seal."""
         index: dict[str, tuple[int, int]] = {}
         good_end = 0
-        with open(path, "rb") as f:
-            while True:
-                off = f.tell()
-                hdr = f.read(_REC_HDR.size)
-                if len(hdr) < _REC_HDR.size:
-                    break
-                crc, klen, vlen = _REC_HDR.unpack(hdr)
-                if klen > 1 << 20 or vlen > 1 << 40:
-                    break
-                kb = f.read(klen)
-                data = f.read(vlen)
-                if len(kb) < klen or len(data) < vlen \
-                        or zlib.crc32(kb + data) != crc:
-                    break
-                index[kb.decode()] = (off, _REC_HDR.size + klen + vlen)
-                good_end = f.tell()
+        for off, kb, data in scan_records(path):
+            rec_len = _REC_HDR.size + len(kb) + len(data)
+            index[kb.decode()] = (off, rec_len)
+            good_end = off + rec_len
         if not index:
             return None
         os.truncate(path, good_end)

@@ -8,6 +8,7 @@ architecture and the extension recipe, §8 for the adaptive subsystem).
 """
 
 from .batch import WriteBatch
+from .durability import CrashPoint, Durability
 from .engine.config import EngineConfig, ENGINES
 from .engines import (EngineStrategy, available_engines, make_strategy,
                       register_engine)
@@ -15,6 +16,7 @@ from .oracle import LatestOracle
 from .sharding import FleetScheduler, ShardedStore
 from .store import Store
 
-__all__ = ["EngineConfig", "ENGINES", "EngineStrategy", "FleetScheduler",
-           "LatestOracle", "ShardedStore", "Store", "WriteBatch",
-           "available_engines", "make_strategy", "register_engine"]
+__all__ = ["CrashPoint", "Durability", "EngineConfig", "ENGINES",
+           "EngineStrategy", "FleetScheduler", "LatestOracle",
+           "ShardedStore", "Store", "WriteBatch", "available_engines",
+           "make_strategy", "register_engine"]

@@ -1,4 +1,4 @@
-"""``scavenger_adaptive``: the seventh registered engine.
+"""``scavenger_adaptive``: the seventh registered engine (DESIGN.md §8).
 
 Scavenger's feature set (compensated compaction, lazy read, decoupled
 index, hot/cold write) plus the workload-adaptive layer this package adds

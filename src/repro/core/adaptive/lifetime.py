@@ -1,4 +1,5 @@
-"""Residual value-lifetime prediction from update-interval histograms.
+"""Residual value-lifetime prediction from update-interval histograms
+(DESIGN.md §8).
 
 DumpKV (arXiv:2406.01250) shows that knowing *when* a value will die lets
 GC skip rewrites that are about to become garbage anyway.  We estimate

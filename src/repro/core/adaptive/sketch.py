@@ -1,4 +1,4 @@
-"""Exponentially-decayed count-min frequency sketch.
+"""Exponentially-decayed count-min frequency sketch (DESIGN.md §8).
 
 A ``DecaySketch`` estimates per-key event rates from a stream of columnar
 batches in O(depth * width) memory.  Two properties matter to callers:

@@ -1,4 +1,5 @@
-"""Hot / warm / cold key classification from decayed write rates.
+"""Hot / warm / cold key classification from decayed write rates
+(DESIGN.md §8).
 
 Cut-points are *relative* to the mean decayed write rate over active keys
 (``EngineConfig.temp_hot_mult`` / ``temp_cold_mult``), so classification

@@ -1,4 +1,5 @@
-"""AccessTracker: the store-facing facade of the adaptive subsystem.
+"""AccessTracker: the store-facing facade of the adaptive subsystem
+(DESIGN.md §8).
 
 One tracker per store (owned by the ``scavenger_adaptive`` strategy) keeps:
 

@@ -1,4 +1,5 @@
-"""WriteBatch: columnar, atomically-applied group of puts/deletes.
+"""WriteBatch: columnar, atomically-applied group of puts/deletes
+(DESIGN.md §3).
 
 The batch is the unit of the group-commit write path (``Store.write``):
 one admission/quota check, one sequence-number range, one WAL append, and

@@ -1,3 +1,6 @@
+"""Engine substrate: config, simulated device, tables, memtable, caches,
+version (DESIGN.md §2-§3)."""
+
 from .config import EngineConfig, ENGINES
 from .io import SimIO, DeviceModel
 from .cache import BlockCache, DropCache

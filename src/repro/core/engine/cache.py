@@ -1,4 +1,5 @@
-"""Block cache (two-priority LRU, RocksDB-style) and DropCache.
+"""Block cache (two-priority LRU, RocksDB-style) and DropCache
+(DESIGN.md §2).
 
 BlockCache models RocksDB's LRUCache with a high-priority pool: blocks
 inserted at high priority (index/filter blocks, and — Scavenger §III-B.2 —

@@ -1,4 +1,4 @@
-"""Engine configuration.
+"""Engine configuration (DESIGN.md §3).
 
 Defaults follow the paper's setup (§IV-A, RocksDB tuning guide): 24B keys,
 512B separation threshold, 64MB memtable/kSST, 256MB vSST, 10 bits/key bloom

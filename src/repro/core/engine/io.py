@@ -1,4 +1,5 @@
-"""Deterministic simulated SSD with byte + latency accounting.
+"""Deterministic simulated SSD with byte + latency accounting
+(DESIGN.md §3).
 
 The paper's evaluation is I/O-bound on a single NVMe SSD; foreground and
 background (flush / compaction / GC) work share one device.  We therefore

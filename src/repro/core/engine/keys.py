@@ -1,4 +1,4 @@
-"""Fixed-width key codec and vectorized hashing.
+"""Fixed-width key codec and vectorized hashing (DESIGN.md §3).
 
 The paper uses 24-byte string keys.  TPU vector units (and our vectorized
 numpy engine) have no variable-length string compare, so the TPU-native

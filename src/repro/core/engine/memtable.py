@@ -1,4 +1,5 @@
-"""Memtable: in-memory sorted write buffer (dict + sort-at-flush).
+"""Memtable: in-memory sorted write buffer (dict + sort-at-flush,
+DESIGN.md §2).
 
 Entries are (seq, etype, vid, vsize, vfile).  Normal user puts are INLINE
 (the memtable holds the full value until flush decides separation); Titan's

@@ -1,4 +1,5 @@
-"""Version / manifest: level structure, value-file registry, inheritance.
+"""Version: level structure, value-file registry, inheritance
+(DESIGN.md §2; the durable MANIFEST lives in ``core/durability``, §9).
 
 TerarkDB-style no-writeback GC (paper §II-B) keeps the index LSM-tree's
 ``<key, file_number>`` entries stable across GC by recording *inheritance*:

@@ -1,4 +1,5 @@
-"""Engine strategy layer: one pluggable policy object per engine.
+"""Engine strategy layer: one pluggable policy object per engine
+(DESIGN.md §7).
 
 ``EngineStrategy`` bundles everything that makes the paper's engines differ
 while sharing one substrate (memtable / SSTables / simulated device):
@@ -181,8 +182,14 @@ class EngineStrategy:
                 store.version.retire_value_file(t.fid, None)
                 store.chains[t.fid] = group
                 store.cache.erase_file(t.fid)
+            store._log_edit("chain_update",
+                            retired=[t.fid for t in candidates],
+                            group=[t.fid for t in new_files])
         else:  # titan writeback: index rewrites as one batched write
             store.writeback_index_batch(vkeys, vvids, vvsz, new_fid_per_rec)
             for t in candidates:
                 store.version.retire_value_file(t.fid, None)
                 store.cache.erase_file(t.fid)
+        if store.durability is not None:
+            for t in candidates:
+                store._log_edit("retire_value_file", fid=t.fid)

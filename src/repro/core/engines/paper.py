@@ -1,4 +1,5 @@
-"""The five paper engines as registered strategies (paper §II, §IV).
+"""The five paper engines as registered strategies (paper §II, §IV;
+DESIGN.md §7).
 
 Each class is *pure declaration*: the shared hook implementations in
 ``EngineStrategy`` are config-driven, so an engine is its attribute block
@@ -78,6 +79,7 @@ class BlobDBEngine(EngineStrategy):
                     if t.live_refs <= 0:
                         store.version.retire_value_file(t.fid, None)
                         store.cache.erase_file(t.fid)
+                        store._log_edit("retire_value_file", fid=t.fid)
             vf[i] = nf
         return (keys, seqs, ety, vids, vsz, vf)
 

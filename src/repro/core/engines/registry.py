@@ -1,4 +1,4 @@
-"""Engine strategy registry.
+"""Engine strategy registry (DESIGN.md §7).
 
 ``EngineConfig`` resolves its engine name here; adding an engine is one
 ``@register_engine`` class in a new module (imported from

@@ -1,4 +1,4 @@
-"""Columnar last-write-wins stats oracle.
+"""Columnar last-write-wins stats oracle (DESIGN.md §7).
 
 ``LatestOracle`` tracks key -> (vid, vsize) for *measurement only* (space-
 amplification denominators, hidden-garbage accounting) — never as an engine

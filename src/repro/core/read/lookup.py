@@ -1,4 +1,5 @@
-"""Vectorized point-lookup machinery (the read layer's hot path).
+"""Vectorized point-lookup machinery (the read layer's hot path,
+DESIGN.md §7).
 
 ``lookup_entries`` walks memtables -> L0 (newest first) -> L1..Ln for a
 whole key column: batched columnar memtable probes (``Memtable.get_batch``),

@@ -1,4 +1,4 @@
-"""Batched range-scan merge planning.
+"""Batched range-scan merge planning (DESIGN.md §7).
 
 A scan merges key-sorted pools from every live source (memtable snapshots,
 immutables, every level's overlapping files), newest-wins by (key, seq)

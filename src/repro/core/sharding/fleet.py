@@ -1,4 +1,5 @@
-"""Fleet scheduler: space-aware GC/compaction scheduling across shards.
+"""Fleet scheduler: space-aware GC/compaction scheduling across shards
+(DESIGN.md §6).
 
 A ``ShardedStore``'s shards share one device, so background service is a
 *fleet* resource: the total flush/compaction (bg) and GC lane time available
@@ -58,8 +59,29 @@ class FleetScheduler:
         self._rr_compact = 0
         self._rr_gc = 0
         self._pumping = False
+        # fleet epoch: bumped at every fleet checkpoint so recovery can tie
+        # per-shard snapshots to one consistent cut (DESIGN.md §9)
+        self.epoch = 0
         for s in self.shards:
             s.scheduler = self
+
+    # ---------------------------------------------------------- durability
+    def state_dict(self) -> dict:
+        """Scheduler state a fleet checkpoint persists: starvation-aging
+        counters, round-robin cursors, and the fleet epoch — so recovered
+        scheduling decisions continue exactly where the fleet left off."""
+        return {"epoch": self.epoch,
+                "compact_wait": list(self.compact_wait),
+                "gc_wait": list(self.gc_wait),
+                "rr_compact": self._rr_compact,
+                "rr_gc": self._rr_gc}
+
+    def load_state(self, st: dict) -> None:
+        self.epoch = int(st["epoch"])
+        self.compact_wait = [int(x) for x in st["compact_wait"]]
+        self.gc_wait = [int(x) for x in st["gc_wait"]]
+        self._rr_compact = int(st["rr_compact"])
+        self._rr_gc = int(st["rr_gc"])
 
     # ------------------------------------------------------------- budgets
     def total_fg_us(self) -> float:

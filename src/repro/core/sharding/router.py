@@ -1,4 +1,5 @@
-"""Shard routers: vectorized key -> shard assignment and scatter plans.
+"""Shard routers: vectorized key -> shard assignment and scatter plans
+(DESIGN.md §6).
 
 Two placement policies:
 

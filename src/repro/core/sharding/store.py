@@ -1,4 +1,5 @@
-"""ShardedStore: N independent Store shards behind one batched Store API.
+"""ShardedStore: N independent Store shards behind one batched Store API
+(DESIGN.md §6).
 
 The keyspace is partitioned across shards by a router (hash or range,
 ``router.py``); the PR-1 batched API (``write`` / ``multi_get`` /
@@ -97,12 +98,15 @@ class FleetClock:
 class ShardedStore(ScalarOps):
     def __init__(self, cfg: EngineConfig, n_shards: int = 1,
                  shard_policy: str = "range", key_space: int | None = None,
-                 scheduler: str = "fleet", aging_rate: float = 0.05):
+                 scheduler: str = "fleet", aging_rate: float = 0.05,
+                 durability_dir=None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.cfg = cfg
         self.n_shards = int(n_shards)
         self.shard_policy = shard_policy
+        self.key_space = key_space
+        self.aging_rate = float(aging_rate)
         # fleet-wide space quota: shards run quota-free, the fleet enforces
         # the shared budget (single-shard stores keep Store's own path so
         # n_shards=1 stays byte-identical to Store)
@@ -121,6 +125,25 @@ class ShardedStore(ScalarOps):
             space_quota_bytes=fleet_quota,
             soft_quota_frac=cfg.soft_quota_frac)
         self.io = FleetClock(self.shards)
+        # Fleet durability (DESIGN.md §9): one fleet-level op journal (the
+        # scheduler is fleet-wide, so replay must re-route batches through
+        # the fleet, not per shard) + one manifest/snapshot dir per shard.
+        self.durability = None
+        self.wal_index = 0
+        if durability_dir is not None:
+            from ..durability import Durability
+            from pathlib import Path
+            root = Path(durability_dir)
+            self.durability = Durability.create(
+                root, cfg, wal=True,
+                meta={"fleet": {"n_shards": self.n_shards,
+                                "shard_policy": shard_policy,
+                                "key_space": key_space,
+                                "scheduler": scheduler,
+                                "aging_rate": aging_rate}})
+            for i, s in enumerate(self.shards):
+                s.durability = Durability.create(
+                    root / f"shard-{i:02d}", s.cfg, wal=False)
 
     # ================================================================== API
     # (scalar put/get/delete/scan come from the shared ScalarOps shims)
@@ -134,6 +157,14 @@ class ShardedStore(ScalarOps):
         n = len(keys)
         if n == 0:
             return np.zeros(0, np.uint64)
+        if self.durability is not None:
+            # fleet journal: replay re-routes through the fleet so the
+            # scheduler sees the same global op stream (DESIGN.md §9).
+            # seq_base is 0: sequence numbers are per-shard, the fleet has
+            # no single seq domain (replay keys off the op index alone)
+            self.wal_index += 1
+            self.durability.log_batch(self.wal_index, 0,
+                                      kinds, keys, vsizes)
         self._fleet_write_pressure()
         if self.n_shards == 1:
             return self.shards[0]._write_arrays(kinds, keys, vsizes)
@@ -182,6 +213,9 @@ class ShardedStore(ScalarOps):
     # -------------------------------------------------------- batched reads
     def multi_get(self, keys: np.ndarray) -> dict:
         keys = np.atleast_1d(np.asarray(keys, np.uint64))
+        if self.durability is not None:
+            self.wal_index += 1
+            self.durability.log_reads(self.wal_index, keys)
         if self.n_shards == 1:
             return self.shards[0].multi_get(keys)
         n = len(keys)
@@ -203,6 +237,9 @@ class ShardedStore(ScalarOps):
     def multi_scan(self, starts: np.ndarray, count) -> list:
         starts = np.atleast_1d(np.asarray(starts)).astype(np.int64)
         counts = np.broadcast_to(np.asarray(count, np.int64), starts.shape)
+        if self.durability is not None:
+            self.wal_index += 1
+            self.durability.log_scans(self.wal_index, starts, counts)
         if self.n_shards == 1:
             return self.shards[0].multi_scan(starts, counts)
         if self.router.policy == "hash":
@@ -261,9 +298,85 @@ class ShardedStore(ScalarOps):
 
     def flush(self) -> None:
         """Force-rotate every shard's memtable, then drain the fleet."""
+        if self.durability is not None:
+            self.wal_index += 1
+            self.durability.log_flush(self.wal_index)
         for s in self.shards:
             s.rotate_memtable()
         self.fleet.drain()
+
+    # ========================================= durability (DESIGN.md §9)
+    def checkpoint(self) -> None:
+        """Fleet checkpoint: snapshot every shard, bump the fleet epoch,
+        roll the fleet journal, and record scheduler state + watermarks in
+        the fleet MANIFEST (per-shard manifests record their own
+        checkpoint edits)."""
+        if self.durability is None:
+            raise ValueError("ShardedStore has no durability directory")
+        # record the exact snapshot files in the fleet edit: a crash
+        # between the per-shard snapshots and the fleet edit must not let
+        # recovery pair newer shard snapshots with an older fleet
+        # watermark (that would double-apply the WAL tail)
+        snaps = [s.durability.checkpoint(s).name for s in self.shards]
+        self.fleet.epoch += 1
+        self.durability.roll_segment()
+        self.durability.log_edit(
+            "fleet_checkpoint", epoch=self.fleet.epoch,
+            wal_epoch=self.durability.epoch, wal_index=self.wal_index,
+            shard_snaps=snaps, scheduler=self.fleet.state_dict())
+
+    def close(self) -> None:
+        if self.durability is not None:
+            self.durability.close()
+            for s in self.shards:
+                s.close()
+
+    @classmethod
+    def open(cls, path) -> "ShardedStore":
+        """Recover a fleet: rebuild the ShardedStore from the fleet
+        MANIFEST, restore every shard's latest snapshot plus the scheduler
+        state at the same fleet epoch, then replay the fleet journal tail
+        through the fleet write path.  With ``n_shards=1`` the result is
+        byte-identical to single-``Store`` recovery (``tests/
+        test_durability.py``)."""
+        from pathlib import Path
+        from ..durability import (Durability, read_manifest, read_wal,
+                                  replay_into, snapshot as dsnap)
+        root = Path(path)
+        edits = read_manifest(root / Durability.MANIFEST)
+        if not edits:
+            raise FileNotFoundError(f"no durable fleet at {root}")
+        cfg_edit = next(e for e in edits if e.kind == "config")
+        fl = cfg_edit.data["fleet"]
+        self = cls(EngineConfig(**cfg_edit.data["cfg"]),
+                   n_shards=fl["n_shards"], shard_policy=fl["shard_policy"],
+                   key_space=fl["key_space"], scheduler=fl["scheduler"],
+                   aging_rate=fl["aging_rate"])
+        ckpts = [e for e in edits if e.kind == "fleet_checkpoint"]
+        wal_from = 0
+        if ckpts:
+            ck = ckpts[-1]
+            for i in range(self.n_shards):
+                sdir = root / f"shard-{i:02d}"
+                # restore the snapshot the fleet edit names, NOT the
+                # shard's newest one — a crash mid-fleet-checkpoint leaves
+                # newer shard snapshots with no matching fleet watermark
+                shard = dsnap.restore(sdir / ck.data["shard_snaps"][i])
+                shard.scheduler = self.fleet
+                self.shards[i] = shard
+                self.fleet.shards[i] = shard
+            self.io = FleetClock(self.shards)
+            self.fleet.load_state(ck.data["scheduler"])
+            self.wal_index = int(ck.data["wal_index"])
+            wal_from = int(ck.data["wal_epoch"])
+        for e in edits:
+            if e.kind == "wal_segment" and int(e.data["epoch"]) >= wal_from:
+                replay_into(self, read_wal(root / e.data["file"]))
+        self.durability = Durability.attach(root, wal=True)
+        for i, s in enumerate(self.shards):
+            s.durability = Durability.attach(root / f"shard-{i:02d}",
+                                             wal=False)
+        return self
 
     # ================================================================ stats
     @property

@@ -54,7 +54,8 @@ __all__ = ["Store"]
 
 
 class Store(ScalarOps):
-    def __init__(self, cfg: EngineConfig, io: SimIO | None = None):
+    def __init__(self, cfg: EngineConfig, io: SimIO | None = None,
+                 durability_dir=None):
         self.cfg = cfg
         self.strategy = make_strategy(cfg)
         self.io = io or SimIO()
@@ -74,6 +75,14 @@ class Store(ScalarOps):
         # owns background scheduling: pump() delegates to it so GC/compaction
         # service is ranked across the whole fleet, not per shard.
         self.scheduler = None
+        # Durability (DESIGN.md §9): off by default — None costs one
+        # attribute check per event and zero simulated device time.
+        self.durability = None
+        self.wal_index = 0              # monotone journal-record watermark
+        self._crash_hooks: dict | None = None
+        if durability_dir is not None:
+            from .durability import Durability
+            self.durability = Durability.create(durability_dir, cfg)
 
         # stats / bookkeeping
         self.latest = LatestOracle()         # measurement-only oracle for
@@ -122,6 +131,14 @@ class Store(ScalarOps):
                             + np.arange(nput, dtype=np.uint64))
         self.next_vid += nput
         self.io.seq_write(total, sio.CAT_WAL)   # one group-committed append
+        if self.durability is not None:
+            # host-side persistence of the same batch the simulated WAL
+            # append just charged; costs zero simulated time (DESIGN.md §9)
+            self.wal_index += 1
+            self.durability.log_batch(self.wal_index, self.seq - n + 1,
+                                      kinds, keys, vsizes)
+        if self._crash_hooks is not None:
+            self._crashpoint("after_wal")
         self.user_write_bytes += total
         self.n_user_ops += n
 
@@ -164,6 +181,12 @@ class Store(ScalarOps):
         not found), ``etype``."""
         keys = np.atleast_1d(np.asarray(keys, np.uint64))
         n = len(keys)
+        if self.durability is not None:
+            # reads are journaled too: under the two-lane clock they move
+            # background scheduling, so byte-identical recovery must replay
+            # them (DESIGN.md §9)
+            self.wal_index += 1
+            self.durability.log_reads(self.wal_index, keys)
         self.n_user_ops += n
         with self.io.batched(n):
             res = self.lookup_entries(keys, sio.CAT_FG_READ)
@@ -189,6 +212,9 @@ class Store(ScalarOps):
         starts = np.atleast_1d(np.asarray(starts)).astype(np.int64)
         counts = np.broadcast_to(np.asarray(count, np.int64),
                                  starts.shape)
+        if self.durability is not None:
+            self.wal_index += 1
+            self.durability.log_scans(self.wal_index, starts, counts)
         self.n_user_ops += len(starts)
         out = []
         with self.io.batched(len(starts)):
@@ -292,6 +318,65 @@ class Store(ScalarOps):
         for k in self.io.lanes:
             self.io.lanes[k] = m
 
+    # ========================================= durability (DESIGN.md §9)
+    def checkpoint(self, path=None):
+        """Write a full-state snapshot.
+
+        With a durable store (``durability_dir``) and no ``path``: snapshot
+        into the store directory, roll the WAL, and record the checkpoint
+        in the MANIFEST.  With ``path``: write a standalone snapshot file
+        (restorable via ``Store.open(path)``), usable without a durable
+        directory."""
+        if path is not None:
+            from .durability import snapshot as dsnap
+            return dsnap.write_snapshot(self, path)
+        if self.durability is None:
+            raise ValueError("store has no durability directory; pass a "
+                             "snapshot path or open with durability_dir")
+        return self.durability.checkpoint(self)
+
+    @classmethod
+    def open(cls, path, io: SimIO | None = None) -> "Store":
+        """Recover a store: restore the latest checkpoint snapshot, then
+        replay the WAL tail through the columnar write path (``path`` may
+        also be a bare snapshot file — restore only)."""
+        from .durability import recover_store
+        return recover_store(path, io=io, cls=cls)
+
+    def close(self) -> None:
+        """Flush and close durable logs (no-op for in-memory stores)."""
+        if self.durability is not None:
+            self.durability.close()
+
+    def _log_edit(self, kind: str, **data) -> None:
+        """Append a MANIFEST VersionEdit (no-op when durability is off)."""
+        if self.durability is not None:
+            self.durability.log_edit(kind, **data)
+
+    def arm_crash(self, point: str, hits: int = 1) -> None:
+        """Crash-injection: raise ``CrashPoint`` at the ``hits``-th pass
+        through the named hook (see ``durability.CRASH_POINTS``)."""
+        from .durability import CRASH_POINTS
+        if point not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {point!r} "
+                             f"(want one of {CRASH_POINTS})")
+        if self._crash_hooks is None:
+            self._crash_hooks = {}
+        self._crash_hooks[point] = int(hits)
+
+    def _crashpoint(self, point: str) -> None:
+        hooks = self._crash_hooks
+        if hooks is None:
+            return
+        left = hooks.get(point)
+        if left is None:
+            return
+        if left <= 1:
+            del hooks[point]            # disarm: the process died here once
+            from .durability import CrashPoint
+            raise CrashPoint(point)
+        hooks[point] = left - 1
+
     # ------------------------------------------------------ write pressure
     def _after_write(self, rec_bytes: int) -> None:
         cfg = self.cfg
@@ -360,7 +445,9 @@ class Store(ScalarOps):
         t = SSTable(cfg, "k", cfg.ksst_layout, keys, seqs, ety, vids, vsz, vf)
         t.compensated_extra = int(vsz[ety == ETYPE_REF].sum())
         self.io.seq_write(t.file_bytes, sio.CAT_FLUSH)
+        self._crashpoint("mid_flush")   # vSSTs cut, kSST not yet live
         self.version.add_l0(t)
+        self._log_edit("add_file", fid=t.fid, level=0, nbytes=t.file_bytes)
 
     def rotate_memtable(self) -> None:
         """Force the active memtable immutable (no background work)."""
@@ -370,6 +457,9 @@ class Store(ScalarOps):
 
     def flush(self) -> None:
         """Force-rotate the memtable and drain all background work."""
+        if self.durability is not None:
+            self.wal_index += 1
+            self.durability.log_flush(self.wal_index)
         self.rotate_memtable()
         self.drain()
 

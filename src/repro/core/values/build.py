@@ -53,6 +53,8 @@ def build_value_files(store, keys, vids, vsizes, cat: str):
                            temperature=temp)
             store.version.add_value_file(t)
             store.io.seq_write(t.file_bytes, cat)
+            store._log_edit("add_value_file", fid=t.fid,
+                            nbytes=t.file_bytes, temperature=int(temp))
             fid_per_rec[m] = t.fid
             files.append(t)
     return files, fid_per_rec

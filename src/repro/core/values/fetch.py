@@ -1,4 +1,5 @@
-"""Coalesced value fetch planning for multi_get / scans (§III-B.1).
+"""Coalesced value fetch planning for multi_get / scans (paper §III-B.1;
+DESIGN.md §7).
 
 Vectorized planning: one inheritance-chain resolution pass for the whole
 locator column, one ``find`` per touched vSST (not per record), record

@@ -1,5 +1,5 @@
 """Garbage exposure: entries dropped during compaction expose value-store
-garbage (Hidden -> Exposed, paper §II-D).
+garbage (Hidden -> Exposed, paper §II-D; DESIGN.md §7).
 
 Vectorized: one chain-resolution pass for the whole dropped column, one
 ``find`` + vid-match per touched vSST.  Rows are *not* de-duplicated —

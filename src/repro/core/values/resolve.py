@@ -1,4 +1,5 @@
-"""Inheritance-chain resolution (TerarkDB/Scavenger no-writeback GC, §II-B).
+"""Inheritance-chain resolution (TerarkDB/Scavenger no-writeback GC,
+paper §II-B; DESIGN.md §7).
 
 The index LSM-tree's ``<key, file_number>`` locators stay stable across GC:
 a GC output file *inherits* from every candidate it merged (``GCGroup``),

@@ -18,6 +18,11 @@ from repro.core import EngineConfig, ShardedStore, Store, WriteBatch
 
 from .paged_cache import PagedKVCacheManager
 
+# Bytes one page costs in a rid's metadata record (the vsize written at
+# admission and decoded by restore_page_tables: vsize // _PAGE_META_BYTES
+# = reserved page count).
+_PAGE_META_BYTES = 16
+
 
 @dataclasses.dataclass
 class Request:
@@ -75,6 +80,42 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def restore_page_tables(self, scan_chunk: int = 1 << 12) -> list[int]:
+        """Rebuild the pager's page reservations from the metadata store.
+
+        After recovering the metadata store (``Store.open`` on its
+        durability directory, passed in as ``meta_store``), every live rid
+        record re-reserves the page count recorded at admission
+        (``_PAGE_META_BYTES`` per page-table entry), so HBM accounting and
+        the duplicate-rid admission guard pick up exactly where the
+        crashed engine left off.  Scans continue past ``scan_chunk`` rids
+        until the keyspace is exhausted — no silent truncation.  KV-cache
+        *contents* are model state and are recomputed on the next prefill
+        — only the page table is durable (DESIGN.md §9).  Returns the
+        restored rids."""
+        restored = []
+        start = 0
+        while True:
+            pairs = self.meta.multi_scan(np.array([start], np.int64),
+                                         count=scan_chunk)[0]
+            if not pairs:
+                break
+            rids = np.array([k for k, _ in pairs], np.uint64)
+            res = self.meta.multi_get(rids)
+            for rid, found, vsize in zip(rids.tolist(),
+                                         res["found"].tolist(),
+                                         res["vsize"].tolist()):
+                if not found or rid in self.pager.page_tables:
+                    continue
+                n_pages = max(1, int(vsize) // _PAGE_META_BYTES)
+                if self.pager.admit(rid, n_pages,
+                                    hot=self._rid_hot(rid, True)):
+                    restored.append(rid)
+            if len(pairs) < scan_chunk:
+                break
+            start = int(rids[-1]) + 1
+        return restored
+
     def _admit(self) -> None:
         admitted: list[tuple[int, int]] = []     # (rid, n_pages)
         try:
@@ -112,7 +153,8 @@ class ServeEngine:
             # duplicate-rid guard
             if admitted:
                 rids = np.array([a[0] for a in admitted], np.uint64)
-                sizes = np.array([a[1] * 16 for a in admitted], np.int64)
+                sizes = np.array([a[1] * _PAGE_META_BYTES
+                                  for a in admitted], np.int64)
                 self.meta.write(WriteBatch().puts(rids, sizes))
 
     def _admit_hot(self, req: Request) -> bool:
@@ -125,11 +167,14 @@ class ServeEngine:
         — the serving tier consumes the same temperature signal that drives
         vSST segregation.  Falls back to the caller's ``req.hot`` hint when
         the meta store has no tracker (default engines, sharded meta)."""
+        return self._rid_hot(req.rid, req.hot)
+
+    def _rid_hot(self, rid: int, default: bool) -> bool:
         tempmap = getattr(getattr(self.meta, "strategy", None),
                           "tempmap", None)
         if tempmap is None:
-            return req.hot
-        rid = np.array([req.rid], np.uint64)
+            return default
+        rid = np.array([rid], np.uint64)
         if tempmap.tracker.write_rate(rid)[0] < 1.0:
             # no evidence for this rid: its metadata write happens after
             # admission, so a first-time rid has no observations — the
@@ -138,7 +183,7 @@ class ServeEngine:
             # a fresh full-count collision can still masquerade as
             # evidence — an accepted sketch trade-off for a placement
             # hint that only steers extent locality, never correctness.
-            return req.hot
+            return default
         from repro.core.adaptive import TEMP_WARM
         return bool(tempmap.classify(rid)[0] >= TEMP_WARM)
 
