@@ -1,17 +1,21 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: check test lint bench-smoke
+.PHONY: check test lint analyze bench-smoke
 
 check: lint test bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
-lint:
+lint: analyze
 	@$(PY) -m ruff --version >/dev/null 2>&1 || \
 		{ echo "ruff not installed (pip install ruff)"; exit 1; }
 	$(PY) -m ruff check src tests benchmarks
+
+# scavlint: project-specific architectural invariants (DESIGN.md §10)
+analyze:
+	$(PY) -m repro.analysis src benchmarks examples tests
 
 bench-smoke:
 	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api read_path \

@@ -1,0 +1,25 @@
+"""scavlint: AST-based architectural invariant analyzer (DESIGN.md §10).
+
+The store core's correctness rests on cross-cutting invariants — every
+version mutation emits a MANIFEST edit (§9), pure EngineStrategy hooks
+stay pure so the engines remain parity-comparable (§7), all byte movement
+routes through the counted two-lane device (§3), hot paths stay columnar
+for the Pallas roadmap — which the dynamic test suite only catches after
+the fact.  scavlint rejects such code at lint time: a small pass
+framework (``framework``), a finding model with line-independent baseline
+keys (``findings`` / ``baseline``), seven built-in passes (``passes``),
+and a CLI (``python -m repro.analysis``; wired into ``make lint`` / CI).
+
+Library use::
+
+    from repro.analysis import run_analysis
+    res = run_analysis(["src"], root=repo_root)
+    assert not res.failed, [f.render() for f in res.findings]
+"""
+
+from .baseline import load_baseline, write_baseline
+from .findings import Finding
+from .framework import SourceFile, all_passes, run_analysis
+
+__all__ = ["Finding", "SourceFile", "all_passes", "run_analysis",
+           "load_baseline", "write_baseline"]

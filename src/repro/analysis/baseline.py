@@ -1,0 +1,42 @@
+"""Baseline (grandfather) file for scavlint findings (DESIGN.md §10).
+
+A baseline is a JSON list of ``Finding.key`` strings: findings whose keys
+appear in it are reported separately and do not fail the run.  Keys are
+line-independent (pass / path / scope / message), so a baseline survives
+unrelated edits; a baselined finding that gets *fixed* simply stops
+matching and the stale key can be pruned with ``--write-baseline``.
+
+The repo's checked-in baseline lives at ``scavlint_baseline.json`` in the
+repo root (the CLI picks it up automatically when present).  The merged
+tree carries **zero** baselined findings — the file exists so a future PR
+can land with an explicit, reviewable grandfather list instead of a
+weakened pass.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+BASELINE_NAME = "scavlint_baseline.json"
+FORMAT = 1
+
+
+def load_baseline(path: Path | str) -> set[str]:
+    obj = json.loads(Path(path).read_text())
+    if obj.get("format") != FORMAT:
+        raise ValueError(f"unsupported baseline format {obj.get('format')!r}"
+                         f" in {path}")
+    return set(obj.get("suppress", []))
+
+
+def write_baseline(path: Path | str, keys) -> Path:
+    path = Path(path)
+    obj = {"format": FORMAT, "suppress": sorted(set(keys))}
+    path.write_text(json.dumps(obj, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def default_baseline(root: Path) -> set[str]:
+    p = root / BASELINE_NAME
+    return load_baseline(p) if p.exists() else set()

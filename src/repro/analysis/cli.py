@@ -1,0 +1,95 @@
+"""scavlint CLI: ``python -m repro.analysis [paths...]`` (DESIGN.md §10).
+
+Human output is one ``path:line: [pass] message`` block per finding (with
+a fix hint); ``--json`` emits a machine-readable report for CI tooling.
+Exit status: 0 when the tree is clean (baselined findings do not fail),
+1 when unbaselined findings remain, 2 on usage errors.
+
+The baseline at ``<root>/scavlint_baseline.json`` is picked up
+automatically; ``--write-baseline`` (re)writes it from the current
+findings — the reviewable way to grandfather a violation instead of
+weakening a pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .baseline import (BASELINE_NAME, default_baseline, load_baseline,
+                       write_baseline)
+from .framework import all_passes, find_root, run_analysis
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="scavlint: architectural invariant analyzer for the "
+                    "layered store core")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/dirs to analyze, relative to the repo root "
+                         "(default: src)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: nearest ancestor with "
+                         "pyproject.toml)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated pass names to run (default: all)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_NAME} "
+                         f"when present)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file and "
+                         "exit 0")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON report on stdout")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list registered passes and exit")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_passes:
+        for name, p in sorted(all_passes().items()):
+            print(f"{name:<20} {p.description}")
+        return 0
+
+    root = args.root or find_root(Path.cwd())
+    try:
+        baseline = (load_baseline(args.baseline) if args.baseline
+                    else default_baseline(root))
+        select = args.select.split(",") if args.select else None
+        res = run_analysis(args.paths or ["src"], root=root, select=select,
+                           baseline_keys=baseline)
+    except (ValueError, OSError) as e:
+        print(f"scavlint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        path = args.baseline or (root / BASELINE_NAME)
+        write_baseline(path, [f.key for f in res.findings])
+        print(f"scavlint: wrote {len(res.findings)} baseline entr"
+              f"{'y' if len(res.findings) == 1 else 'ies'} to {path}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.to_dict() for f in res.findings],
+            "baselined": [f.to_dict() for f in res.baselined],
+            "parse_errors": [f.to_dict() for f in res.parse_errors],
+            "failed": res.failed,
+        }, indent=2))
+        return 1 if res.failed else 0
+
+    for f in res.parse_errors + res.findings:
+        print(f.render())
+    n, nb = len(res.findings) + len(res.parse_errors), len(res.baselined)
+    tail = f" ({nb} baselined)" if nb else ""
+    if n:
+        print(f"scavlint: {n} finding{'s' if n != 1 else ''}{tail}")
+        return 1
+    print(f"scavlint: clean{tail}")
+    return 0

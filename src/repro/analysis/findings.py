@@ -1,0 +1,44 @@
+"""Finding model for scavlint (DESIGN.md §10).
+
+A ``Finding`` is one architectural-invariant violation: which pass raised
+it, where (repo-relative path + line + enclosing scope), what is wrong,
+and how to fix it.  ``Finding.key`` is deliberately *line-independent*
+(pass / path / scope / message) so baseline entries survive unrelated
+edits that shift line numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_name: str
+    severity: str
+    path: str                 # repo-relative, posix separators
+    line: int
+    message: str
+    hint: str = ""
+    context: str = ""         # enclosing function qualname or "<module>"
+
+    @property
+    def key(self) -> str:
+        """Stable identity used by the baseline file (no line number)."""
+        return "::".join((self.pass_name, self.path, self.context,
+                          self.message))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["key"] = self.key
+        return d
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        out = f"{where}: [{self.pass_name}] {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out

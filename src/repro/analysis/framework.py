@@ -1,0 +1,235 @@
+"""scavlint pass framework: parsed sources, suppressions, pass registry
+(DESIGN.md §10).
+
+The analyzer is a small AST-visitor harness, not a general linter:
+
+  * ``SourceFile`` parses one module and records per-line
+    ``# scavlint: allow-<token>`` suppressions plus function extents, so a
+    pass can ask "is this node's finding suppressed?" (on the node's line,
+    the line above, or the enclosing ``def`` line).
+  * ``Pass`` subclasses implement ``check(sf)`` over one file;
+    ``ProjectPass`` subclasses implement ``check_project(files, root)``
+    for repo-shaped invariants (kernel packaging, docs citations).
+  * ``@register`` collects passes; ``run_analysis`` parses the selected
+    trees once and feeds every pass, returning active + baselined
+    findings.
+
+Passes declare a ``scope(rel)`` predicate over repo-relative paths, so
+running the CLI over ``benchmarks/`` or ``examples/`` only applies the
+passes that are meaningful there (the rest are documented scoped
+exclusions, not silent skips — see DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from .findings import SEV_ERROR, Finding
+
+_ALLOW_RE = re.compile(r"#\s*scavlint:\s*(allow-[\w-]+)")
+
+
+class SourceFile:
+    """One parsed module: AST + suppression comments + function extents."""
+
+    def __init__(self, text: str, rel: str, path: Path | None = None):
+        self.text = text
+        self.rel = rel.replace("\\", "/")
+        self.path = path
+        self.tree = ast.parse(text)          # SyntaxError surfaces to caller
+        self.allows: dict[int, set[str]] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            toks = _ALLOW_RE.findall(line)
+            if toks:
+                self.allows[i] = set(toks)
+        # (start, end, def_line, qualname) per function, innermost last
+        self.func_spans: list[tuple[int, int, int, str]] = []
+        self._index_functions(self.tree, prefix="")
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+        return cls(path.read_text(), rel, path)
+
+    def _index_functions(self, node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}{child.name}"
+                if not isinstance(child, ast.ClassDef):
+                    end = getattr(child, "end_lineno", child.lineno)
+                    self.func_spans.append(
+                        (child.lineno, end, child.lineno, qual))
+                self._index_functions(child, prefix=f"{qual}.")
+
+    def qualname_at(self, line: int) -> str:
+        """Innermost enclosing function qualname, or ``<module>``."""
+        best = "<module>"
+        for start, end, _, qual in self.func_spans:
+            if start <= line <= end:
+                best = qual        # spans are indexed outer-to-inner
+        return best
+
+    def suppressed(self, line: int, token: str) -> bool:
+        """True if ``allow-<token>`` appears on the line, the line above,
+        or the enclosing ``def`` line."""
+        tok = token if token.startswith("allow-") else f"allow-{token}"
+        if tok in self.allows.get(line, ()) or \
+           tok in self.allows.get(line - 1, ()):
+            return True
+        for start, end, def_line, _ in self.func_spans:
+            if start <= line <= end and tok in self.allows.get(def_line, ()):
+                return True
+        return False
+
+
+def attr_root(node: ast.AST) -> str | None:
+    """Root ``Name`` id of an attribute/subscript chain (``a.b[c].d`` -> a)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def called_attr(call: ast.Call) -> str | None:
+    """Attribute name of a method call (``x.y.z(...)`` -> ``z``)."""
+    return call.func.attr if isinstance(call.func, ast.Attribute) else None
+
+
+# ============================================================= pass model
+class Pass:
+    """One architectural invariant, checked per file."""
+
+    name: str = ""
+    description: str = ""
+    severity: str = SEV_ERROR
+    allow_token: str = ""          # inline escape hatch ("" = baseline only)
+    project: bool = False
+
+    def scope(self, rel: str) -> bool:
+        """Repo-relative paths this pass applies to (default: store core)."""
+        return rel.startswith("src/repro/core/")
+
+    def check(self, sf: SourceFile):
+        raise NotImplementedError
+
+    # helper: build a finding unless suppressed by the inline escape hatch
+    def finding(self, sf: SourceFile, node: ast.AST, message: str,
+                hint: str = "") -> Finding | None:
+        line = getattr(node, "lineno", 1)
+        if self.allow_token and sf.suppressed(line, self.allow_token):
+            return None
+        return Finding(self.name, self.severity, sf.rel, line, message,
+                       hint=hint, context=sf.qualname_at(line))
+
+
+class ProjectPass(Pass):
+    """Invariant over the whole selected tree (runs once per analysis)."""
+
+    project = True
+
+    def check_project(self, files: list[SourceFile], root: Path):
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, Pass] = {}
+
+
+def register(cls):
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"pass {cls.__name__} has no name")
+    if inst.name in _REGISTRY:
+        raise ValueError(f"duplicate pass name {inst.name!r}")
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def all_passes() -> dict[str, Pass]:
+    from . import passes  # noqa: F401  (importing registers the passes)
+    return dict(_REGISTRY)
+
+
+# ================================================================ running
+def find_root(start: Path) -> Path:
+    """Nearest ancestor containing pyproject.toml (else ``start``)."""
+    p = start.resolve()
+    if p.is_file():
+        p = p.parent
+    for cand in (p, *p.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return start.resolve()
+
+
+def collect_files(root: Path, paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        fp = (root / p) if not Path(p).is_absolute() else Path(p)
+        if fp.is_file() and fp.suffix == ".py":
+            out.append(fp)
+        elif fp.is_dir():
+            out.extend(sorted(fp.rglob("*.py")))
+    # de-dup, keep order, skip caches
+    seen, files = set(), []
+    for f in out:
+        r = f.resolve()
+        if r in seen or "__pycache__" in r.parts:
+            continue
+        seen.add(r)
+        files.append(r)
+    return files
+
+
+class Result:
+    def __init__(self):
+        self.findings: list[Finding] = []    # active (unbaselined)
+        self.baselined: list[Finding] = []
+        self.parse_errors: list[Finding] = []
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.parse_errors) or any(
+            f.severity == SEV_ERROR for f in self.findings)
+
+
+def run_analysis(paths: list[str], root: Path | None = None,
+                 select: list[str] | None = None,
+                 baseline_keys: set[str] | None = None) -> Result:
+    """Parse ``paths`` (files/dirs, relative to ``root``) and run passes."""
+    if root is None:
+        root = find_root(Path(paths[0]) if paths else Path.cwd())
+    passes = all_passes()
+    if select:
+        unknown = set(select) - set(passes)
+        if unknown:
+            raise ValueError(f"unknown pass(es): {sorted(unknown)} "
+                             f"(have: {sorted(passes)})")
+        passes = {k: v for k, v in passes.items() if k in select}
+
+    res = Result()
+    files: list[SourceFile] = []
+    for path in collect_files(root, paths):
+        try:
+            files.append(SourceFile.load(path, root))
+        except SyntaxError as e:
+            rel = path.relative_to(root).as_posix()
+            res.parse_errors.append(Finding(
+                "parse", SEV_ERROR, rel, e.lineno or 1,
+                f"syntax error: {e.msg}"))
+
+    raw: list[Finding] = []
+    for p in passes.values():
+        if p.project:
+            raw.extend(p.check_project(files, root))
+        else:
+            for sf in files:
+                if p.scope(sf.rel):
+                    raw.extend(f for f in p.check(sf) if f is not None)
+
+    raw.sort(key=lambda f: (f.path, f.line, f.pass_name, f.message))
+    baseline_keys = baseline_keys or set()
+    for f in raw:
+        (res.baselined if f.key in baseline_keys else res.findings).append(f)
+    return res

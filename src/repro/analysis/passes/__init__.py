@@ -1,0 +1,16 @@
+"""scavlint's built-in passes (DESIGN.md §10).
+
+Importing this package registers every pass with the framework registry;
+each module is one architectural invariant:
+
+  * ``durability``        — version mutations emit MANIFEST edits (§9)
+  * ``purity``            — pure EngineStrategy hooks stay pure (§7)
+  * ``io_accounting``     — bytes route through the counted SimIO (§3)
+  * ``vectorization``     — hot paths stay columnar (§7)
+  * ``kernel_parity``     — kernel packages ship kernel/ref/ops + test (§5)
+  * ``config_discipline`` — numeric knobs live in EngineConfig (§3)
+  * ``docs``              — docstrings cite real DESIGN sections
+"""
+
+from . import (config_discipline, docs, durability, io_accounting,  # noqa: F401
+               kernel_parity, purity, vectorization)

@@ -1,0 +1,102 @@
+"""config-discipline: numeric behaviour knobs live in EngineConfig
+(DESIGN.md §10, invariant from §3).
+
+A bare numeric literal in the store core is an unregistered knob: it
+tunes behaviour but is invisible to ``EngineConfig.scaled()``, ablation
+sweeps, and the config MANIFEST edit — the code-level analogue of the
+paper's unaccounted space.  This pass flags int/float literals in
+``core/`` outside the sanctioned constant homes:
+
+  * ``engine/config.py``  (EngineConfig itself)
+  * ``engine/io.py``      (the DeviceModel cost constants)
+
+Exempt by construction (not knobs):
+
+  * small structural literals: ints {-2,-1,0,1,2}, floats
+    {-1.0, 0.0, 0.5, 1.0, 2.0} and the unit conversions 1e3/1e6,
+  * module/class-level ``ALL_CAPS = ...`` constant definitions (named
+    constants are the point),
+  * function-signature default values (named, self-documenting),
+  * shift widths (``1 << 20``-style size spellings),
+  * subscript indices (``rec[3]``, ``shape[0]`` — positions in a fixed
+    layout, not tunables).
+
+Escape hatch: ``# scavlint: allow-const <why>`` for structural literals
+that are genuinely not tunable (sentinels, format widths).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, register
+
+_OK_INTS = {-2, -1, 0, 1, 2}
+_OK_FLOATS = {-1.0, 0.0, 0.5, 1.0, 2.0, 1e3, 1e6}
+
+_EXCLUDED = ("src/repro/core/engine/config.py",
+             "src/repro/core/engine/io.py")
+
+
+def _exempt_ids(tree: ast.AST) -> set[int]:
+    """ids of Constant nodes inside sanctioned contexts."""
+    out: set[int] = set()
+
+    def mark(node):
+        for n in ast.walk(node):
+            if isinstance(n, ast.Constant):
+                out.add(id(n))
+
+    for node in ast.walk(tree):
+        # ALL_CAPS constant definitions (module or class level)
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            if all(isinstance(t, ast.Name) and t.id.isupper()
+                   for t in targets) and node.value is not None:
+                mark(node.value)
+        # function-signature defaults
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for d in (*node.args.defaults, *node.args.kw_defaults):
+                if d is not None:
+                    mark(d)
+        # shift-width spellings like 8 << 10
+        elif isinstance(node, ast.BinOp) and \
+                isinstance(node.op, (ast.LShift, ast.RShift)):
+            mark(node)
+        # subscript indices: rec[3], shape[0], v[1:4] — layout positions
+        elif isinstance(node, ast.Subscript):
+            mark(node.slice)
+    return out
+
+
+@register
+class ConfigDisciplinePass(Pass):
+    name = "config-discipline"
+    description = ("numeric literals in core/ outside EngineConfig / "
+                   "DeviceModel are unregistered knobs")
+    allow_token = "allow-const"
+
+    def scope(self, rel: str) -> bool:
+        return (rel.startswith("src/repro/core/")
+                and rel not in _EXCLUDED)
+
+    def check(self, sf):
+        exempt = _exempt_ids(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Constant) or id(node) in exempt:
+                continue
+            v = node.value
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            if isinstance(v, int) and v in _OK_INTS:
+                continue
+            if isinstance(v, float) and v in _OK_FLOATS:
+                continue
+            yield self.finding(
+                sf, node,
+                f"unregistered numeric knob {v!r}",
+                hint="promote to an EngineConfig field (so scaled()/"
+                     "ablations/the config MANIFEST edit see it), hoist to "
+                     "an ALL_CAPS constant, or annotate "
+                     "'# scavlint: allow-const <why>'")

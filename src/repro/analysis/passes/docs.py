@@ -1,0 +1,89 @@
+"""docs-citation: module docstrings cite real DESIGN.md sections
+(DESIGN.md §10; single enforcement point for the former tests/test_docs.py
+checks, which now wrap this pass).
+
+Three invariants keep code and architecture doc linked:
+
+  * DESIGN.md's ``## §N`` sections are contiguous ``1..max`` (a hole means
+    a reshuffle left dangling numbers);
+  * every public module under ``src/repro/core/`` opens with a docstring
+    citing its section (``DESIGN.md §N``);
+  * every ``DESIGN §N`` reference in any analyzed source file — plus
+    README.md — resolves to an existing section.
+
+Stale/missing citations have no meaningful inline escape (fixing the
+citation *is* the fix), so the only suppression is the baseline file.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from ..findings import Finding
+from ..framework import ProjectPass, register
+
+CITE_RE = re.compile(r"DESIGN(?:\.md)?\s*§(\d+)")
+HEADING_RE = re.compile(r"^## §(\d+)\b", re.M)
+
+
+def design_sections(root) -> set[int]:
+    p = root / "DESIGN.md"
+    if not p.exists():
+        return set()
+    return {int(m) for m in HEADING_RE.findall(p.read_text())}
+
+
+@register
+class DocsCitationPass(ProjectPass):
+    name = "docs-citation"
+    description = ("core module docstrings cite their DESIGN.md section; "
+                   "all DESIGN § references resolve")
+
+    def check_project(self, files, root):
+        secs = design_sections(root)
+        if not secs:
+            yield Finding(self.name, self.severity, "DESIGN.md", 1,
+                          "DESIGN.md is missing or has no '## §N' sections")
+            return
+        if secs != set(range(1, max(secs) + 1)):
+            yield Finding(
+                self.name, self.severity, "DESIGN.md", 1,
+                f"DESIGN.md sections are not contiguous: {sorted(secs)}",
+                hint="renumber sections 1..N; stale numbers break every "
+                     "code citation")
+
+        for sf in files:
+            # citation requirement: public core modules only
+            base = sf.rel.rsplit("/", 1)[-1]
+            if sf.rel.startswith("src/repro/core/") and (
+                    not base.startswith("_") or base == "__init__.py"):
+                doc = ast.get_docstring(sf.tree) or ""
+                if not CITE_RE.search(doc):
+                    yield Finding(
+                        self.name, self.severity, sf.rel, 1,
+                        "core module docstring does not cite its DESIGN.md "
+                        "section",
+                        hint="open the module docstring with a "
+                             "'(DESIGN.md §N)' pointer to the architecture "
+                             "doc section it implements")
+            # resolution requirement: every analyzed file
+            for i, line in enumerate(sf.text.splitlines(), start=1):
+                for m in CITE_RE.findall(line):
+                    if int(m) not in secs:
+                        yield Finding(
+                            self.name, self.severity, sf.rel, i,
+                            f"stale reference to nonexistent DESIGN.md "
+                            f"§{m}",
+                            hint=f"DESIGN.md has §1..§{max(secs)}")
+
+        readme = root / "README.md"
+        if readme.exists():
+            for i, line in enumerate(readme.read_text().splitlines(),
+                                     start=1):
+                for m in CITE_RE.findall(line):
+                    if int(m) not in secs:
+                        yield Finding(
+                            self.name, self.severity, "README.md", i,
+                            f"stale reference to nonexistent DESIGN.md "
+                            f"§{m}")

@@ -1,0 +1,66 @@
+"""durability-coverage: version-state mutations must emit MANIFEST edits
+(DESIGN.md §10, invariant from §9).
+
+Every function in the store core that mutates the ``Version`` registry —
+``add_l0`` / ``set_level`` / ``add_value_file`` / ``retire_value_file`` —
+must, in the *same function*, append a MANIFEST ``VersionEdit``
+(``_log_edit`` / ``log_edit`` / ``ManifestWriter.edit``).  A mutation
+without a paired edit is unaccounted state: the durable audit log diverges
+from the in-memory version, which is exactly the "hidden garbage" failure
+mode the paper pins on unaccounted space.
+
+Scoped exclusions: ``engine/version.py`` (defines the mutators) and
+``core/durability/`` (recovery *replays* edits; restoring state must not
+re-log it).  Escape hatch: ``# scavlint: allow-durability`` on the call
+or the enclosing ``def``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, called_attr, register
+
+MUTATORS = ("add_l0", "set_level", "add_value_file", "retire_value_file")
+LOGGERS = ("_log_edit", "log_edit", "edit")
+
+_EXCLUDED = ("src/repro/core/engine/version.py",
+             "src/repro/core/durability/")
+
+
+@register
+class DurabilityCoveragePass(Pass):
+    name = "durability-coverage"
+    description = ("Version-registry mutations must log a MANIFEST "
+                   "VersionEdit in the same function")
+    allow_token = "allow-durability"
+
+    def scope(self, rel: str) -> bool:
+        return (rel.startswith("src/repro/core/")
+                and not rel.startswith(_EXCLUDED))
+
+    def check(self, sf):
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            mutations, logs = [], False
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                attr = called_attr(node)
+                if attr in MUTATORS:
+                    mutations.append((node, attr))
+                elif attr in LOGGERS or (
+                        isinstance(node.func, ast.Name)
+                        and node.func.id in LOGGERS):
+                    logs = True
+            if logs:
+                continue
+            for node, attr in mutations:
+                yield self.finding(
+                    sf, node,
+                    f"{fn.name}() calls version-mutating {attr}() without "
+                    f"a paired MANIFEST log_edit",
+                    hint="emit store._log_edit(...) for the mutation (it is "
+                         "a no-op when durability is off), or annotate the "
+                         "call '# scavlint: allow-durability' with a reason")

@@ -1,0 +1,62 @@
+"""io-accounting: all byte movement in the store core routes through the
+counted two-lane device (DESIGN.md §10, invariant from §3).
+
+Raw host IO — builtin ``open``, ``os.read``-family calls, ``mmap``,
+``Path.read_bytes``-style helpers — inside ``core/`` bypasses ``SimIO``'s
+per-category byte/latency accounting, so its cost is invisible to every
+space/time figure the repro validates.  The only sanctioned raw-IO sites
+are ``engine/io.py`` (the device model itself) and ``core/durability/``
+(host-side persistence of WAL/MANIFEST/snapshots, which by design costs
+zero *simulated* time — DESIGN.md §9).
+
+Escape hatch: ``# scavlint: allow-raw-io`` with a reason.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, attr_root, called_attr, register
+
+_OS_IO = ("open", "read", "write", "pread", "pwrite", "sendfile",
+          "readv", "writev")
+_PATH_IO = ("read_bytes", "write_bytes", "read_text", "write_text")
+
+_EXCLUDED = ("src/repro/core/engine/io.py", "src/repro/core/durability/")
+
+
+@register
+class IOAccountingPass(Pass):
+    name = "io-accounting"
+    description = ("no raw host IO in core/ outside engine/io.py and "
+                   "durability/ — route bytes through the counted SimIO")
+    allow_token = "allow-raw-io"
+
+    def scope(self, rel: str) -> bool:
+        return (rel.startswith("src/repro/core/")
+                and not rel.startswith(_EXCLUDED))
+
+    def check(self, sf):
+        hint = ("charge the transfer on store.io (seq_read/seq_write/"
+                "rand_read) or move host-side persistence into "
+                "core/durability/; annotate '# scavlint: allow-raw-io' "
+                "only with a reason")
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name) and node.func.id == "open":
+                yield self.finding(sf, node,
+                                   "raw builtin open() in core/", hint=hint)
+                continue
+            attr = called_attr(node)
+            root = attr_root(node.func)
+            if root == "os" and attr in _OS_IO:
+                yield self.finding(sf, node,
+                                   f"raw os.{attr}() in core/", hint=hint)
+            elif root == "mmap" and attr == "mmap":
+                yield self.finding(sf, node,
+                                   "raw mmap.mmap() in core/", hint=hint)
+            elif attr in _PATH_IO:
+                yield self.finding(
+                    sf, node,
+                    f"raw .{attr}() file IO in core/", hint=hint)

@@ -1,0 +1,76 @@
+"""kernel-parity: every Pallas kernel package ships kernel + oracle +
+dispatch and is exercised by a test (DESIGN.md §10, invariant from §5).
+
+Each ``src/repro/kernels/<name>/`` package must contain
+
+  * ``kernel.py`` — the Pallas implementation,
+  * ``ref.py``    — the pure-jnp oracle it is validated against,
+  * ``ops.py``    — the jitted dispatch wrapper callers import,
+
+and the kernel must be referenced from ``tests/`` (by package name or by
+one of its ``ops.py`` public functions), so an orphaned kernel cannot
+silently rot: the interpret-mode parity harness in ``tests/test_kernels.py``
+is the only thing standing between "kernel" and "untested device code".
+
+Escape hatch: baseline entry (there is no inline comment to hang an
+allow on for a *missing* file).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..findings import Finding
+from ..framework import ProjectPass, register
+
+REQUIRED = ("kernel.py", "ref.py", "ops.py")
+
+
+def _public_ops(ops_path) -> list[str]:
+    try:
+        tree = ast.parse(ops_path.read_text())
+    except (OSError, SyntaxError):
+        return []
+    return [n.name for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not n.name.startswith("_")]
+
+
+@register
+class KernelParityPass(ProjectPass):
+    name = "kernel-parity"
+    description = ("kernels/<name>/ ships kernel.py + ref.py + ops.py and "
+                   "is referenced by a test")
+
+    def check_project(self, files, root):
+        kdir = root / "src" / "repro" / "kernels"
+        if not kdir.is_dir():
+            return
+        # Only enforce when the kernels tree is part of this run's scope.
+        if not any(sf.rel.startswith("src/repro/kernels/") for sf in files):
+            return
+        tests_text = "\n".join(
+            p.read_text() for p in sorted((root / "tests").glob("test_*.py"))
+        ) if (root / "tests").is_dir() else ""
+
+        for pkg in sorted(p for p in kdir.iterdir()
+                          if p.is_dir() and (p / "__init__.py").exists()):
+            rel = pkg.relative_to(root).as_posix()
+            missing = [f for f in REQUIRED if not (pkg / f).exists()]
+            for f in missing:
+                yield Finding(
+                    self.name, self.severity, f"{rel}/__init__.py", 1,
+                    f"kernel package {pkg.name!r} is missing {f}",
+                    hint="every kernel ships the Pallas kernel, its jnp "
+                         "oracle (ref.py), and the dispatch wrapper "
+                         "(ops.py) — see src/repro/kernels/bloom/")
+            if "ops.py" in missing:
+                continue
+            names = [pkg.name] + _public_ops(pkg / "ops.py")
+            if not any(n in tests_text for n in names):
+                yield Finding(
+                    self.name, self.severity, f"{rel}/ops.py", 1,
+                    f"kernel package {pkg.name!r} is not referenced by any "
+                    f"test under tests/",
+                    hint="add an interpret-mode parity test against ref.py "
+                         "in tests/test_kernels.py")

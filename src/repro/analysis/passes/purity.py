@@ -1,0 +1,88 @@
+"""hook-purity: EngineStrategy scoring/observation hooks stay pure
+(DESIGN.md §10, invariant from §7).
+
+The seven engines are parity-comparable because the *pure* strategy hooks
+— ``separation_mask``, ``level_weight``, ``file_weight``,
+``gc_candidate_score``, ``rewrite_temperature``, ``observe_batch`` — only
+read store state and return a value.  A hook that assigns a Store/Version
+attribute or calls a mutation/IO-charging method smuggles engine-specific
+side effects into shared code paths, breaking the golden byte-parity
+contract (engine-local state on ``self`` is fine: that is where adaptive
+trackers live).
+
+Mutating hooks (``on_compaction_kept``, ``gc_finalize``,
+``gc_read_candidate``, ``gc_value_read``, ``rank_compaction_inputs``) are
+*by contract* effectful and are not checked here — their effects are
+covered by durability-coverage and io-accounting.
+
+Escape hatch: ``# scavlint: allow-impure-hook`` on the offending line or
+the hook's ``def`` line.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, attr_root, called_attr, register
+
+PURE_HOOKS = ("separation_mask", "level_weight", "file_weight",
+              "gc_candidate_score", "rewrite_temperature", "observe_batch")
+
+# Methods whose call inside a pure hook means store/version mutation or
+# simulated-device time: the hook is no longer a pure policy function.
+MUTATION_CALLS = ("add_l0", "set_level", "add_value_file",
+                  "retire_value_file", "writeback_index",
+                  "writeback_index_batch", "expose_garbage",
+                  "build_value_files", "_log_edit", "log_edit",
+                  "seq_write", "seq_read", "rand_read", "cache_hit",
+                  "stall", "record", "erase_file", "put")
+
+_SCOPES = ("src/repro/core/engines/", "src/repro/core/adaptive/engine.py")
+
+
+@register
+class HookPurityPass(Pass):
+    name = "hook-purity"
+    description = ("pure EngineStrategy hooks may not mutate store state "
+                   "or charge device time")
+    allow_token = "allow-impure-hook"
+
+    def scope(self, rel: str) -> bool:
+        return rel.startswith(_SCOPES)
+
+    def check(self, sf):
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    or fn.name not in PURE_HOOKS:
+                continue
+            yield from self._check_hook(sf, fn)
+
+    def _check_hook(self, sf, fn):
+        hint = ("pure hooks return policy decisions; move side effects "
+                "into an effectful hook (gc_finalize / on_compaction_kept) "
+                "or keep state on self")
+        for node in ast.walk(fn):
+            targets = []
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+            elif isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            elif isinstance(node, ast.Delete):
+                targets = node.targets
+            for t in targets:
+                if isinstance(t, (ast.Attribute, ast.Subscript)):
+                    root = attr_root(t)
+                    if root not in (None, "self"):
+                        yield self.finding(
+                            sf, node,
+                            f"pure hook {fn.name}() assigns state rooted at "
+                            f"parameter {root!r}", hint=hint)
+            if isinstance(node, ast.Call):
+                attr = called_attr(node)
+                if attr in MUTATION_CALLS and \
+                        attr_root(node.func) not in (None, "self"):
+                    yield self.finding(
+                        sf, node,
+                        f"pure hook {fn.name}() calls mutating/IO method "
+                        f"{attr}()", hint=hint)

@@ -1,0 +1,84 @@
+"""vectorization: no per-element Python loops on the columnar hot paths
+(DESIGN.md §10, invariant from §7).
+
+The read/value/adaptive layers are batch-shaped end to end — PR 1/3
+measured 23x on exactly this discipline, and the Pallas roadmap item
+(kernels over the same columns) depends on it staying columnar.  This
+pass flags ``for`` statements in ``core/read/`` / ``core/values/`` /
+``core/adaptive/`` whose iterator is batch-shaped per *element*:
+
+  * ``for ... in zip(a, b)``         — lockstep element walk
+  * ``for ... in range(len(a))``     — index walk
+  * ``for ... in a.tolist()``        — array spilled to Python objects
+
+Loops over *deduplicated* domains (``np.unique(...)`` — per touched file
+/ block, not per record) and ``reversed(...)`` structure walks are
+exempt: their trip count is bounded by structure size, not batch size.
+
+A flagged loop that is genuinely per-file/per-run (bounded small) takes
+``# scavlint: allow-loop`` with a reason on the same line — the escape
+hatch doubles as documentation of *why* the loop is not per-key.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, register
+
+_HOT_PATHS = ("src/repro/core/read/", "src/repro/core/values/",
+              "src/repro/core/adaptive/")
+
+
+def _contains_exempt_call(node: ast.AST) -> bool:
+    """Iterator subtree mentions np.unique(...) or reversed(...)."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Name) and f.id in ("reversed", "unique"):
+                return True
+            if isinstance(f, ast.Attribute) and f.attr == "unique":
+                return True
+    return False
+
+
+def _loop_kind(it: ast.AST) -> str | None:
+    if not isinstance(it, ast.Call):
+        return None
+    f = it.func
+    if isinstance(f, ast.Name):
+        if f.id == "zip":
+            return "zip(...) element walk"
+        if f.id == "range" and len(it.args) == 1 and \
+                isinstance(it.args[0], ast.Call) and \
+                isinstance(it.args[0].func, ast.Name) and \
+                it.args[0].func.id == "len":
+            return "range(len(...)) index walk"
+    if isinstance(f, ast.Attribute) and f.attr == "tolist":
+        return ".tolist() array spill"
+    return None
+
+
+@register
+class VectorizationPass(Pass):
+    name = "vectorization"
+    description = ("no per-element Python for-loops over batch-shaped "
+                   "iterables in core/read, core/values, core/adaptive")
+    allow_token = "allow-loop"
+
+    def scope(self, rel: str) -> bool:
+        return rel.startswith(_HOT_PATHS)
+
+    def check(self, sf):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.For):
+                continue
+            kind = _loop_kind(node.iter)
+            if kind is None or _contains_exempt_call(node.iter):
+                continue
+            yield self.finding(
+                sf, node,
+                f"per-element loop on a hot path: {kind}",
+                hint="vectorize with numpy column ops, or — if the loop is "
+                     "per-file/per-run (bounded by structure, not batch) — "
+                     "annotate '# scavlint: allow-loop <why>'")

@@ -31,6 +31,11 @@ from ..engines.registry import register_engine
 from .temperature import TemperatureMap
 from .tracker import AccessTracker
 
+# prediction-cache pruning: sweep dead fids once the cache outgrows the
+# live vSST set by this factor (floored so tiny stores don't thrash)
+_SOON_CACHE_SLACK = 4
+_SOON_CACHE_MIN = 8
+
 
 @register_engine
 class AdaptiveScavengerEngine(ScavengerEngine):
@@ -87,8 +92,8 @@ class AdaptiveScavengerEngine(ScavengerEngine):
             resid = self.tracker.residual_lifetime(t.keys, default=np.inf)
             p = 1.0 - 0.5 ** (horizon / np.maximum(resid, 1.0))
             pred_dead = float((p * t.rec_bytes).sum())
-            if len(self._soon_cache) > 4 * max(len(store.version.value_files),
-                                               8):
+            if len(self._soon_cache) > _SOON_CACHE_SLACK * max(
+                    len(store.version.value_files), _SOON_CACHE_MIN):
                 live_files = store.version.value_files
                 self._soon_cache = {fid: v
                                     for fid, v in self._soon_cache.items()

@@ -22,20 +22,27 @@ import numpy as np
 from .sketch import normalize_half_life
 
 N_BUCKETS = 32          # log2 interval buckets: covers up to 2^31 ops
+BUCKET_CENTER = 1.5     # midpoint multiplier for bucket [2^b, 2^(b+1))
+_EPS_MASS = 1e-12       # division guard for empty histograms
+_MIN_MASS = 1e-9        # below this a group counts as unobserved
 
 
 class LifetimeEstimator:
-    __slots__ = ("n_groups", "half_life", "last_write", "hist", "_centers")
+    __slots__ = ("n_groups", "half_life", "residual_floor", "last_write",
+                 "hist", "_centers")
 
-    def __init__(self, n_groups: int, half_life: float | None = None):
+    def __init__(self, n_groups: int, half_life: float | None = None,
+                 residual_floor: float = 0.1):
         if n_groups < 1:
             raise ValueError("n_groups must be >= 1")
         self.n_groups = int(n_groups)
         self.half_life = normalize_half_life(half_life)
+        self.residual_floor = float(residual_floor)
         self.last_write = np.full(self.n_groups, -1.0, np.float64)
         self.hist = np.zeros((self.n_groups, N_BUCKETS), np.float64)
         # bucket b holds intervals in [2^b, 2^(b+1)); center = 1.5 * 2^b
-        self._centers = 1.5 * 2.0 ** np.arange(N_BUCKETS, dtype=np.float64)
+        self._centers = BUCKET_CENTER * 2.0 ** np.arange(N_BUCKETS,
+                                                         dtype=np.float64)
 
     # ------------------------------------------------------------- observe
     def observe(self, groups: np.ndarray, now: float) -> None:
@@ -63,8 +70,8 @@ class LifetimeEstimator:
         g = np.asarray(groups, np.int64)
         h = self.hist[g]
         w = h.sum(axis=1)
-        mean = (h @ self._centers) / np.maximum(w, 1e-12)
-        return np.where(w > 1e-9, mean, default)
+        mean = (h @ self._centers) / np.maximum(w, _EPS_MASS)
+        return np.where(w > _MIN_MASS, mean, default)
 
     def residual(self, groups: np.ndarray, now: float,
                  default: float = np.inf) -> np.ndarray:
@@ -72,8 +79,8 @@ class LifetimeEstimator:
         overwritten.
 
         Within the predicted interval: the mean interval less the age,
-        floored at a tenth of the mean (updates are not clockwork; a live
-        hot group's residual never hits zero).  *Past* it, the prediction
+        floored at ``residual_floor`` of the mean (updates are not
+        clockwork; a live hot group's residual never hits zero).  *Past* it, the prediction
         has been falsified — the group stopped updating on schedule (e.g. a
         hotspot moved away) — so the residual grows with the age instead:
         values that keep surviving are expected to keep surviving, and GC
@@ -82,4 +89,5 @@ class LifetimeEstimator:
         m = self.mean_interval(g, default)
         age = np.where(self.last_write[g] >= 0,
                        now - self.last_write[g], 0.0)
-        return np.where(age > m, age, np.maximum(m - age, 0.1 * m))
+        return np.where(age > m, age,
+                        np.maximum(m - age, self.residual_floor * m))

@@ -22,6 +22,8 @@ import numpy as np
 
 from ..engine.keys import splitmix64
 
+_MIN_MASS = 1e-9        # decayed mass below this counts as an empty slot
+
 
 def normalize_half_life(half_life: float | None) -> float | None:
     """Shared decay-window normalization: None / inf / <= 0 all mean
@@ -91,4 +93,4 @@ class DecaySketch:
 
     def active_slots(self) -> int:
         """Occupied row-0 slots — a lower bound on distinct active keys."""
-        return int(np.count_nonzero(self.counts[0] > 1e-9))
+        return int(np.count_nonzero(self.counts[0] > _MIN_MASS))

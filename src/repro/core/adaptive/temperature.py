@@ -24,6 +24,8 @@ from ..engine.tables import TEMP_COLD, TEMP_HOT, TEMP_WARM
 
 __all__ = ["TEMP_COLD", "TEMP_WARM", "TEMP_HOT", "TemperatureMap"]
 
+_EPS_RATE = 1e-12       # division guard when no writes have been observed
+
 
 class TemperatureMap:
     __slots__ = ("tracker", "hot_mult", "cold_mult")
@@ -38,7 +40,7 @@ class TemperatureMap:
     def classify(self, keys: np.ndarray) -> np.ndarray:
         """-> int8 array of TEMP_COLD / TEMP_WARM / TEMP_HOT per key."""
         rate = self.tracker.write_rate(keys)
-        base = max(self.tracker.mean_write_rate(), 1e-12)
+        base = max(self.tracker.mean_write_rate(), _EPS_RATE)
         return np.where(rate >= self.hot_mult * base, TEMP_HOT,
                         np.where(rate <= self.cold_mult * base,
                                  TEMP_COLD, TEMP_WARM)).astype(np.int8)

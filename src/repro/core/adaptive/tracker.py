@@ -28,24 +28,30 @@ from ..engine.keys import splitmix64
 from .lifetime import LifetimeEstimator
 from .sketch import DecaySketch
 
+_WRITES_SEED = 0x5CA7       # distinct hash families for the two sketches
+_READS_SEED = 0xADAF
+
 
 class AccessTracker:
     __slots__ = ("n_groups", "writes", "reads", "lifetime", "ops")
 
     def __init__(self, n_groups: int, sketch_width: int, sketch_depth: int,
-                 half_life_ops: float | None):
+                 half_life_ops: float | None,
+                 residual_floor: float = 0.1):
         self.n_groups = int(n_groups)
         self.writes = DecaySketch(sketch_width, sketch_depth,
-                                  half_life_ops, seed=0x5ca7)
+                                  half_life_ops, seed=_WRITES_SEED)
         self.reads = DecaySketch(sketch_width, sketch_depth,
-                                 half_life_ops, seed=0xadaf)
-        self.lifetime = LifetimeEstimator(n_groups, half_life_ops)
+                                 half_life_ops, seed=_READS_SEED)
+        self.lifetime = LifetimeEstimator(n_groups, half_life_ops,
+                                          residual_floor=residual_floor)
         self.ops = 0.0
 
     @classmethod
     def from_config(cls, cfg) -> "AccessTracker":
         return cls(cfg.adaptive_groups, cfg.adaptive_sketch_width,
-                   cfg.adaptive_sketch_depth, cfg.adaptive_half_life_ops)
+                   cfg.adaptive_sketch_depth, cfg.adaptive_half_life_ops,
+                   residual_floor=cfg.adaptive_residual_floor)
 
     # ------------------------------------------------------------- observe
     def group_of(self, keys: np.ndarray) -> np.ndarray:

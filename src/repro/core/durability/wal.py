@@ -34,6 +34,7 @@ from .records import (append_record, pack_array, scan_records,
 
 _IDX_HDR = struct.Struct("<Q")          # op index
 _SEQ_HDR = struct.Struct("<Q")          # seq_base (write batches only)
+_BATCH_ARRAYS = 3                       # "b" payload: kinds, keys, vsizes
 
 
 def _encode_arrays(*arrays) -> bytes:
@@ -92,7 +93,8 @@ def read_wal(path: Path | str) -> list[tuple]:
         off = _IDX_HDR.size
         if kind == "b":
             (seq_base,) = _SEQ_HDR.unpack_from(payload, off)
-            arrays = _decode_arrays(payload, off + _SEQ_HDR.size, 3)
+            arrays = _decode_arrays(payload, off + _SEQ_HDR.size,
+                                    _BATCH_ARRAYS)
             out.append(("b", idx, seq_base, *arrays))
         elif kind == "r":
             out.append(("r", idx, *_decode_arrays(payload, off, 1)))

@@ -41,6 +41,7 @@ class EngineConfig:
     index_entry_extra: int = 8     # offset field in index entries
     footer_bytes: int = 48
     filter_bits_per_key: int = 10
+    wal_rec_overhead: int = 12     # per-record WAL framing (seq + header)
 
     # ---- structure sizes ----
     memtable_bytes: int = 64 << 20
@@ -79,6 +80,11 @@ class EngineConfig:
     space_quota_bytes: int | None = None
     soft_quota_frac: float = 0.9
     slowdown_us_per_write: float = 20.0
+    quota_stall_rounds: int = 256   # forced-GC rounds per stalled write call
+
+    # ---- scan retry ----
+    scan_retry_rounds: int = 32     # max refill rounds per scan call
+    scan_retry_growth: int = 4      # per-source limit multiplier per round
 
     # ---- I/O behaviour ----
     readahead_gc: bool = False      # paper disables GC readahead by default
@@ -101,6 +107,7 @@ class EngineConfig:
     adaptive_score_refresh_ops: int = 2048  # candidate-score cache window
     temp_hot_mult: float = 4.0              # hot: rate >= mult * mean rate
     temp_cold_mult: float = 0.5             # cold: rate <= mult * mean rate
+    adaptive_residual_floor: float = 0.1    # min residual lifetime, frac of mean
 
     def __post_init__(self):
         # lazy import: the strategy modules import table/IO substrate, which
@@ -140,6 +147,9 @@ class EngineConfig:
             if getattr(self, field) <= 0:
                 raise ValueError(f"{field} must be > 0, got "
                                  f"{getattr(self, field)}")
+        if not 0.0 < self.adaptive_residual_floor <= 1.0:
+            raise ValueError("adaptive_residual_floor must be in (0, 1], got "
+                             f"{self.adaptive_residual_floor}")
         if not 0.0 <= self.adaptive_defer_weight <= 1.0:
             raise ValueError("adaptive_defer_weight must be in [0, 1], got "
                              f"{self.adaptive_defer_weight}")

@@ -16,6 +16,11 @@ _SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
 _MIX1 = np.uint64(0xBF58476D1CE4E5B9)
 _MIX2 = np.uint64(0x94D049BB133111EB)
 
+_LN2 = 0.69                     # probes ~= ln2 * bits/key (RocksDB's round)
+_WORD_BITS = 64                 # bloom bit array is u64 words
+_WORD_BYTES = 8
+_WORD_MASK = np.uint64(63)      # bit index within a word
+
 
 def splitmix64(x: np.ndarray | int) -> np.ndarray:
     """Vectorized splitmix64 finalizer (u64 -> u64, wrapping)."""
@@ -51,21 +56,21 @@ class BloomFilter:
     @staticmethod
     def k_for(bits_per_key: int) -> int:
         """Number of hash probes for a given bits/key (ln2 * bits/key)."""
-        return max(1, int(round(bits_per_key * 0.69)))
+        return max(1, int(round(bits_per_key * _LN2)))
 
     def __init__(self, keys: np.ndarray, bits_per_key: int = 10):
         n = max(1, len(keys))
-        self.nbits = int(max(64, n * bits_per_key))
+        self.nbits = int(max(_WORD_BITS, n * bits_per_key))
         # round up to u64 words
-        nwords = (self.nbits + 63) // 64
-        self.nbits = nwords * 64
+        nwords = (self.nbits + _WORD_BITS - 1) // _WORD_BITS
+        self.nbits = nwords * _WORD_BITS
         self.k = self.k_for(bits_per_key)
         self.bits = np.zeros(nwords, dtype=np.uint64)
-        self.nbytes = nwords * 8
+        self.nbytes = nwords * _WORD_BYTES
         if len(keys):
             hs = hash_family(keys, self.k) % np.uint64(self.nbits)
             word = (hs >> np.uint64(6)).ravel()
-            bit = (hs & np.uint64(63)).ravel()
+            bit = (hs & _WORD_MASK).ravel()
             np.bitwise_or.at(self.bits, word, np.uint64(1) << bit)
 
     def may_contain(self, keys: np.ndarray,
@@ -81,6 +86,6 @@ class BloomFilter:
             raw = hash_family(keys, self.k)
         hs = raw % np.uint64(self.nbits)
         word = hs >> np.uint64(6)
-        bit = hs & np.uint64(63)
+        bit = hs & _WORD_MASK
         hit = (self.bits[word] >> bit) & np.uint64(1)
         return hit.all(axis=0)

@@ -26,6 +26,7 @@ from .keys import BloomFilter
 ETYPE_INLINE = 0
 ETYPE_REF = 1
 ETYPE_TOMB = 2
+ETYPE_NONE = 255        # result-column sentinel: key not found
 
 # vSST temperature classes (adaptive segregation, DESIGN.md §8; the
 # adaptive layer's TemperatureMap re-exports these)

@@ -17,6 +17,10 @@ import numpy as np
 
 _TOMB_VID = np.uint64(0)        # live vids start at 1 (Store.next_vid)
 
+# delta-run compaction trigger: delta > max(_DELTA_MIN, sqrt(base) * 16)
+_DELTA_MIN = 1024
+_DELTA_SQRT_MULT = 16
+
 
 def _probe(keys: np.ndarray, ks: np.ndarray) -> tuple:
     """found mask + safe gather positions of ``ks`` in sorted ``keys``."""
@@ -112,7 +116,9 @@ class LatestOracle:
 
         # amortized compaction: delta stays ~sqrt(base)-sized, so per-batch
         # work is O(batch + sqrt(total)) instead of O(total keys)
-        if len(self.dkeys) > max(1024, int(len(self.bkeys) ** 0.5) * 16):
+        if len(self.dkeys) > max(_DELTA_MIN,
+                                 int(len(self.bkeys) ** 0.5)
+                                 * _DELTA_SQRT_MULT):
             self._compact()
 
     def _compact(self) -> None:

@@ -13,7 +13,7 @@ import numpy as np
 
 from ..engine.cache import BlockCache
 from ..engine.keys import BloomFilter, hash_family
-from ..engine.tables import ETYPE_REF, SSTable
+from ..engine.tables import ETYPE_NONE, ETYPE_REF, SSTable
 
 
 def read_block(store, t: SSTable, stream: str, block_id: int, cat: str,
@@ -61,7 +61,7 @@ def lookup_entries(store, keys: np.ndarray, cat: str) -> dict:
     n = len(keys)
     out = {
         "found": np.zeros(n, bool),
-        "etype": np.full(n, 255, np.uint8),
+        "etype": np.full(n, ETYPE_NONE, np.uint8),
         "vid": np.zeros(n, np.uint64),
         "vsize": np.zeros(n, np.int64),
         "vfile": np.full(n, -1, np.int64),

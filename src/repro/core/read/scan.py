@@ -19,13 +19,13 @@ from ..values.fetch import read_values_batch
 def scan_retry(store, start_key: int, count: int):
     """Retry wrapper: grow per-source limits until the result is complete."""
     limit = count
-    for _ in range(32):
+    for _ in range(store.cfg.scan_retry_rounds):
         out, min_excluded = scan_once(store, start_key, count, limit)
         complete = min_excluded is None or (
             len(out) >= count and out[-1][0] < min_excluded)
         if complete:
             return out
-        limit *= 4
+        limit *= store.cfg.scan_retry_growth
     return out
 
 

@@ -37,6 +37,7 @@ import numpy as np
 
 from ..batch import ScalarOps, WriteBatch
 from ..engine.config import EngineConfig
+from ..engine.tables import ETYPE_NONE
 from ..store import Store
 from .fleet import FleetScheduler
 from .router import HashRouter, make_router, scatter
@@ -194,7 +195,7 @@ class ShardedStore(ScalarOps):
             # shard's lanes to its fg clock) is charged as stall, matching
             # Store._stall_while's accounting
             before = [s.io.fg_clock_us for s in self.shards]
-            for _ in range(256):
+            for _ in range(self.shards[0].cfg.quota_stall_rounds):
                 if self.fleet.space_bytes() < quota:
                     break
                 if not self.fleet.run_one(prefer_gc=True):
@@ -224,7 +225,7 @@ class ShardedStore(ScalarOps):
         out = {"found": np.zeros(n, bool),
                "vid": np.zeros(n, np.uint64),
                "vsize": np.zeros(n, np.int64),
-               "etype": np.full(n, 255, np.uint8)}
+               "etype": np.full(n, ETYPE_NONE, np.uint8)}
         for s in range(self.n_shards):
             rows = order[starts[s]:ends[s]]
             if len(rows) == 0:

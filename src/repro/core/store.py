@@ -121,8 +121,8 @@ class Store(ScalarOps):
             return vids_out
         self._write_pressure()
         is_put = kinds == OP_PUT
-        recs = np.where(is_put, cfg.key_bytes + vsizes + 12,
-                        cfg.key_bytes + 12).astype(np.int64)
+        recs = np.where(is_put, cfg.key_bytes + vsizes + cfg.wal_rec_overhead,
+                        cfg.key_bytes + cfg.wal_rec_overhead).astype(np.int64)
         total = int(recs.sum())
         seqs = np.uint64(self.seq + 1) + np.arange(n, dtype=np.uint64)
         self.seq += n
@@ -408,7 +408,7 @@ class Store(ScalarOps):
             def over():
                 nonlocal seen
                 seen += 1
-                return (seen < 256
+                return (seen < cfg.quota_stall_rounds
                         and self.version.total_bytes()
                         >= cfg.space_quota_bytes)
             self._stall_while(over, prefer_gc=True)

@@ -40,6 +40,7 @@ def read_values_batch(store, keys, vids, vfiles, vsizes, cat,
         return
     fsel, ksel, vsel = fids[ok], keys[ok], vids[ok]
     uniq, first = np.unique(fsel, return_index=True)
+    # one vSST per unique fid — structure-bounded  # scavlint: allow-loop
     for fid in uniq[np.argsort(first)].tolist():    # first-occurrence order
         t = store.version.value_files[fid]
         m = fsel == fid

@@ -29,6 +29,7 @@ def expose_garbage(store, keys, ety, vids, vsizes, vfiles) -> None:
         return
     fsel, ksel, vsel = fids[ok], keys[ok], vids[ok]
     uniq, first = np.unique(fsel, return_index=True)
+    # one vSST per unique fid — structure-bounded  # scavlint: allow-loop
     for fid in uniq[np.argsort(first)].tolist():    # first-occurrence order
         t = store.version.value_files.get(fid)
         if t is None:
@@ -48,4 +49,5 @@ def expose_garbage(store, keys, ety, vids, vsizes, vfiles) -> None:
             t.live_refs -= nhit
             if t.live_refs <= 0:
                 store.version.retire_value_file(t.fid, None)
+                store._log_edit("retire_value_file", fid=t.fid)
                 store.cache.erase_file(t.fid)

@@ -13,6 +13,10 @@ import numpy as np
 
 from ..engine.tables import SSTable
 
+# hop bound on chain walks — a safety net against metadata corruption, not
+# a tunable: real chains are at most a few GC generations deep
+_CHAIN_HOP_CAP = 10_000
+
 
 class GCGroup:
     """Inheritance target: the set of output files of one GC run."""
@@ -99,7 +103,7 @@ def resolve_value_fids(store, vfiles: np.ndarray, keys: np.ndarray,
     # added or retired while chains are walked
     live = store.version.value_files
     live_fids = np.fromiter(live.keys(), np.int64, count=len(live))
-    for _ in range(10_000):
+    for _ in range(_CHAIN_HOP_CAP):
         rows = np.nonzero(active)[0]
         if len(rows) == 0:
             return out

@@ -1,0 +1,410 @@
+"""scavlint self-tests (DESIGN.md §10).
+
+Good/bad fixture snippets per pass, the suppression-comment escape hatch,
+the baseline round-trip, CLI exit codes, and the zero-findings smoke on
+``src/`` — a regression in the analyzer is caught the same way as a
+regression in the store it guards.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import SourceFile, all_passes, run_analysis
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.cli import main as cli_main
+from repro.analysis.findings import Finding
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def check(pass_name: str, text: str, rel: str) -> list[Finding]:
+    """Run one file-scoped pass over a source snippet."""
+    p = all_passes()[pass_name]
+    sf = SourceFile(text, rel)
+    assert p.scope(sf.rel), f"{rel} should be in scope of {pass_name}"
+    return [f for f in p.check(sf) if f is not None]
+
+
+def in_scope(pass_name: str, rel: str) -> bool:
+    return all_passes()[pass_name].scope(rel)
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_all_passes():
+    names = set(all_passes())
+    assert names == {"durability-coverage", "hook-purity", "io-accounting",
+                     "vectorization", "kernel-parity", "config-discipline",
+                     "docs-citation"}
+
+
+def test_finding_key_is_line_independent():
+    a = Finding("p", "error", "f.py", 10, "msg", context="fn")
+    b = Finding("p", "error", "f.py", 99, "msg", context="fn")
+    assert a.key == b.key
+    c = Finding("p", "error", "f.py", 10, "other", context="fn")
+    assert a.key != c.key
+
+
+# ---------------------------------------------------- durability-coverage
+BAD_DURABILITY = """
+def drop(store, fid):
+    store.version.retire_value_file(fid, None)
+"""
+
+GOOD_DURABILITY = """
+def drop(store, fid):
+    store.version.retire_value_file(fid, None)
+    store._log_edit("retire_value_file", fid=fid)
+"""
+
+
+def test_durability_flags_unlogged_mutation():
+    fs = check("durability-coverage", BAD_DURABILITY,
+               "src/repro/core/values/x.py")
+    assert len(fs) == 1 and "retire_value_file" in fs[0].message
+    assert fs[0].context == "drop"
+
+
+def test_durability_accepts_paired_log_edit():
+    assert not check("durability-coverage", GOOD_DURABILITY,
+                     "src/repro/core/values/x.py")
+
+
+def test_durability_suppression_on_def_line():
+    text = BAD_DURABILITY.replace(
+        "def drop(store, fid):",
+        "def drop(store, fid):  # scavlint: allow-durability replay only")
+    assert not check("durability-coverage", text,
+                     "src/repro/core/values/x.py")
+
+
+def test_durability_scope_excludes_version_and_durability():
+    assert not in_scope("durability-coverage",
+                        "src/repro/core/engine/version.py")
+    assert not in_scope("durability-coverage",
+                        "src/repro/core/durability/wal.py")
+    assert not in_scope("durability-coverage", "benchmarks/run.py")
+
+
+# ------------------------------------------------------------- hook-purity
+BAD_HOOK_ASSIGN = """
+class E:
+    def gc_candidate_score(self, store, t):
+        store.version.marker = 1
+        return 0.0
+"""
+
+BAD_HOOK_CALL = """
+class E:
+    def observe_batch(self, store, keys):
+        store.io.seq_write(100)
+"""
+
+GOOD_HOOK = """
+class E:
+    def gc_candidate_score(self, store, t):
+        self._cache[t.fid] = t.garbage_bytes
+        return t.garbage_bytes / max(t.file_bytes, 1)
+
+    def gc_finalize(self, store, batch):
+        store.version.retire_value_file(batch[0], None)
+        store._log_edit("retire_value_file", fid=batch[0])
+"""
+
+
+def test_purity_flags_param_rooted_assign():
+    fs = check("hook-purity", BAD_HOOK_ASSIGN,
+               "src/repro/core/engines/custom.py")
+    assert len(fs) == 1 and "'store'" in fs[0].message
+
+
+def test_purity_flags_mutating_call():
+    fs = check("hook-purity", BAD_HOOK_CALL,
+               "src/repro/core/engines/custom.py")
+    assert len(fs) == 1 and "seq_write" in fs[0].message
+
+
+def test_purity_allows_self_state_and_effectful_hooks():
+    assert not check("hook-purity", GOOD_HOOK,
+                     "src/repro/core/engines/custom.py")
+
+
+def test_purity_scope_is_engines_and_adaptive_engine():
+    assert in_scope("hook-purity", "src/repro/core/adaptive/engine.py")
+    assert not in_scope("hook-purity", "src/repro/core/store.py")
+
+
+# ---------------------------------------------------------- io-accounting
+BAD_IO = """
+import os
+
+
+def slurp(path):
+    with open(path) as f:          # builtin open
+        data = f.read()
+    os.read(0, 10)
+    return data
+"""
+
+
+def test_io_accounting_flags_raw_io():
+    fs = check("io-accounting", BAD_IO, "src/repro/core/read/x.py")
+    msgs = " ".join(f.message for f in fs)
+    assert len(fs) == 2 and "open()" in msgs and "os.read" in msgs
+
+
+def test_io_accounting_scope_excludes_device_and_durability():
+    assert not in_scope("io-accounting", "src/repro/core/engine/io.py")
+    assert not in_scope("io-accounting", "src/repro/core/durability/wal.py")
+
+
+def test_io_accounting_suppression():
+    text = BAD_IO.replace("os.read(0, 10)",
+                          "os.read(0, 10)  # scavlint: allow-raw-io probe")
+    fs = check("io-accounting", text, "src/repro/core/read/x.py")
+    assert len(fs) == 1 and "open()" in fs[0].message
+
+
+# ----------------------------------------------------------- vectorization
+BAD_LOOPS = """
+def f(keys, vals, arr):
+    for k, v in zip(keys, vals):
+        pass
+    for i in range(len(keys)):
+        pass
+    for v in arr.tolist():
+        pass
+"""
+
+GOOD_LOOPS = """
+import numpy as np
+
+
+def f(fids, tables):
+    for fid in np.unique(fids):
+        pass
+    for t in reversed(tables):
+        pass
+    for fid in np.unique(fids).tolist():
+        pass
+"""
+
+
+def test_vectorization_flags_per_element_loops():
+    fs = check("vectorization", BAD_LOOPS, "src/repro/core/read/x.py")
+    assert len(fs) == 3
+
+
+def test_vectorization_exempts_structure_bounded_loops():
+    assert not check("vectorization", GOOD_LOOPS,
+                     "src/repro/core/values/x.py")
+
+
+def test_vectorization_suppression_on_line_above():
+    text = BAD_LOOPS.replace(
+        "    for v in arr.tolist():",
+        "    # per-file walk  # scavlint: allow-loop\n"
+        "    for v in arr.tolist():")
+    fs = check("vectorization", text, "src/repro/core/read/x.py")
+    assert len(fs) == 2
+
+
+def test_vectorization_scope_is_hot_paths_only():
+    assert not in_scope("vectorization", "src/repro/core/store.py")
+    assert in_scope("vectorization", "src/repro/core/adaptive/tracker.py")
+
+
+# ------------------------------------------------------- config-discipline
+BAD_CONST = """
+def f(x):
+    return x * 37
+"""
+
+GOOD_CONST = """
+CAP = 37
+MASK = 0xFF
+
+
+def f(x, k=37):
+    y = 1 << 20
+    z = x[3]
+    return x + 1, y, z, k
+"""
+
+
+def test_config_discipline_flags_bare_literal():
+    fs = check("config-discipline", BAD_CONST, "src/repro/core/values/x.py")
+    assert len(fs) == 1 and "37" in fs[0].message
+
+
+def test_config_discipline_exemptions():
+    assert not check("config-discipline", GOOD_CONST,
+                     "src/repro/core/values/x.py")
+
+
+def test_config_discipline_suppression():
+    text = BAD_CONST.replace(
+        "return x * 37",
+        "return x * 37  # scavlint: allow-const format width")
+    assert not check("config-discipline", text, "src/repro/core/values/x.py")
+
+
+def test_config_discipline_scope_excludes_config_and_io():
+    assert not in_scope("config-discipline", "src/repro/core/engine/config.py")
+    assert not in_scope("config-discipline", "src/repro/core/engine/io.py")
+
+
+# ------------------------------------------------- project passes (tmp repo)
+def make_repo(tmp_path: Path, design: str, modules: dict[str, str],
+              tests: dict[str, str] | None = None) -> Path:
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    (tmp_path / "DESIGN.md").write_text(design)
+    for rel, text in modules.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    for rel, text in (tests or {}).items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return tmp_path
+
+
+DESIGN_2 = "## §1 One\n\ntext\n\n## §2 Two\n\ntext\n"
+
+
+def test_docs_pass_clean_tree(tmp_path):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/mod.py": '"""Thing (DESIGN.md §1)."""\n'})
+    res = run_analysis(["src"], root=root, select=["docs-citation"])
+    assert not res.failed
+
+
+def test_docs_pass_flags_missing_and_stale_citations(tmp_path):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/nocite.py": '"""No citation here."""\n',
+        "src/repro/core/stale.py": '"""Thing (DESIGN.md §7)."""\n'})
+    res = run_analysis(["src"], root=root, select=["docs-citation"])
+    msgs = " ".join(f.message for f in res.findings)
+    assert "does not cite" in msgs and "nonexistent DESIGN.md §7" in msgs
+
+
+def test_docs_pass_flags_non_contiguous_sections(tmp_path):
+    root = make_repo(tmp_path, "## §1 One\n\n## §3 Three\n", {
+        "src/repro/core/mod.py": '"""Thing (DESIGN.md §1)."""\n'})
+    res = run_analysis(["src"], root=root, select=["docs-citation"])
+    assert any("not contiguous" in f.message for f in res.findings)
+
+
+KERNEL_FILES = {
+    "src/repro/kernels/foo/__init__.py": "",
+    "src/repro/kernels/foo/kernel.py": "def _k():\n    pass\n",
+    "src/repro/kernels/foo/ref.py": "def _r():\n    pass\n",
+    "src/repro/kernels/foo/ops.py": "def foo_lookup():\n    pass\n",
+}
+
+
+def test_kernel_parity_clean(tmp_path):
+    root = make_repo(tmp_path, DESIGN_2, KERNEL_FILES,
+                     {"tests/test_kernels.py": "import foo_lookup\n"})
+    res = run_analysis(["src"], root=root, select=["kernel-parity"])
+    assert not res.failed
+
+
+def test_kernel_parity_flags_missing_ref_and_missing_test(tmp_path):
+    files = {k: v for k, v in KERNEL_FILES.items() if not k.endswith("ref.py")}
+    root = make_repo(tmp_path, DESIGN_2, files,
+                     {"tests/test_other.py": "unrelated = 1\n"})
+    res = run_analysis(["src"], root=root, select=["kernel-parity"])
+    msgs = " ".join(f.message for f in res.findings)
+    assert "missing ref.py" in msgs
+    assert "not referenced by any test" in msgs
+
+
+# --------------------------------------------------------------- baseline
+def test_baseline_round_trip_and_grandfathering(tmp_path):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/bad.py":
+            '"""Bad module (DESIGN.md §1)."""\n\n' + BAD_DURABILITY})
+    res = run_analysis(["src"], root=root)
+    assert res.failed and len(res.findings) == 1
+
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, [f.key for f in res.findings])
+    assert load_baseline(bl) == {res.findings[0].key}
+
+    res2 = run_analysis(["src"], root=root, baseline_keys=load_baseline(bl))
+    assert not res2.failed and not res2.findings
+    assert len(res2.baselined) == 1
+
+
+def test_baseline_rejects_unknown_format(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"format": 99, "suppress": []}))
+    with pytest.raises(ValueError):
+        load_baseline(p)
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_exit_codes(tmp_path, capsys):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/good.py": '"""Fine (DESIGN.md §1)."""\n'})
+    assert cli_main(["src", "--root", str(root)]) == 0
+
+    bad = tmp_path / "src/repro/core/bad.py"
+    bad.write_text('"""Bad (DESIGN.md §1)."""\n\n' + BAD_DURABILITY)
+    assert cli_main(["src", "--root", str(root)]) == 1
+
+    assert cli_main(["src", "--root", str(root),
+                     "--select", "no-such-pass"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/bad.py":
+            '"""Bad (DESIGN.md §1)."""\n\n' + BAD_DURABILITY})
+    assert cli_main(["src", "--root", str(root), "--write-baseline"]) == 0
+    assert (root / "scavlint_baseline.json").exists()
+    # baseline is picked up automatically -> now clean (1 baselined)
+    assert cli_main(["src", "--root", str(root)]) == 0
+    out = capsys.readouterr().out
+    assert "baselined" in out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/bad.py":
+            '"""Bad (DESIGN.md §1)."""\n\n' + BAD_DURABILITY})
+    assert cli_main(["src", "--root", str(root), "--json"]) == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["failed"] is True
+    assert report["findings"][0]["pass_name"] == "durability-coverage"
+    assert "key" in report["findings"][0]
+
+
+def test_cli_reports_syntax_errors(tmp_path, capsys):
+    root = make_repo(tmp_path, DESIGN_2, {
+        "src/repro/core/broken.py": "def oops(:\n"})
+    assert cli_main(["src", "--root", str(root)]) == 1
+    assert "syntax error" in capsys.readouterr().out
+
+
+# ------------------------------------------------------------------ smoke
+def test_src_tree_is_clean_without_baseline():
+    """The merged tree carries zero unbaselined *and* zero baselined
+    findings — the analyzer gate is real, not grandfathered away."""
+    res = run_analysis(["src"], root=REPO)
+    msgs = [f.render() for f in res.parse_errors + res.findings]
+    assert not res.failed, "\n".join(msgs)
+    assert not res.findings and not res.baselined
+
+
+def test_benchmarks_and_examples_are_clean():
+    res = run_analysis(["benchmarks", "examples"], root=REPO)
+    msgs = [f.render() for f in res.parse_errors + res.findings]
+    assert not res.failed, "\n".join(msgs)
