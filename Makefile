@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: check test lint analyze bench-smoke
+.PHONY: check test lint analyze bench-smoke trace
 
 check: lint test bench-smoke
 
@@ -18,5 +18,16 @@ analyze:
 	$(PY) -m repro.analysis src benchmarks examples tests
 
 bench-smoke:
-	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run batch_api read_path \
+	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run \
+		--trace=trace_out batch_api read_path \
 		sharding adaptive_gc recovery fig02_tradeoff
+	$(PY) -m repro.obs check trace_out
+
+# Perfetto-viewable observability dump from the fig02 workload
+# (+ read_path for the multi_get tail) — DESIGN.md §11
+trace:
+	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run \
+		--trace=trace_out fig02_tradeoff read_path
+	$(PY) -m repro.obs check trace_out
+	$(PY) -m repro.obs summarize trace_out
+	@echo "open trace_out/*/trace.json in https://ui.perfetto.dev"

@@ -47,6 +47,40 @@ def ds_bytes(quick_mb: int) -> int:
     return quick_mb * mult << 20
 
 
+# ------------------------------------------------ tracing (DESIGN.md §11)
+_TRACE_OBS = None
+
+
+def trace_dir() -> str | None:
+    """Observability dump root (``--trace=DIR`` on benchmarks.run, or
+    REPRO_TRACE_DIR); None disables tracing."""
+    return os.environ.get("REPRO_TRACE_DIR") or None
+
+
+def trace_observer():
+    """The Observer shared by every store built while tracing is on (one
+    per benchmark module — ``dump_trace`` closes it out); None when off."""
+    global _TRACE_OBS
+    if trace_dir() is None:
+        return None
+    if _TRACE_OBS is None:
+        from repro.obs import Observer
+        _TRACE_OBS = Observer()
+    return _TRACE_OBS
+
+
+def dump_trace(module: str) -> str | None:
+    """Dump and reset the live trace observer into
+    ``<trace_dir>/<module>/`` (events/metrics/health/trace JSON)."""
+    global _TRACE_OBS
+    if _TRACE_OBS is None:
+        return None
+    out = os.path.join(trace_dir(), module)
+    _TRACE_OBS.dump(out)
+    _TRACE_OBS = None
+    return out
+
+
 def build(engine: str, spec: WorkloadSpec, quota_x: float | None = None,
           **overrides) -> tuple[Store, Runner]:
     """Build a (possibly sharded) store + Runner for a workload spec.
@@ -55,6 +89,7 @@ def build(engine: str, spec: WorkloadSpec, quota_x: float | None = None,
     the dataset (a shard is a full store over 1/N of the keyspace), and the
     space quota — when requested — is enforced fleet-wide."""
     quota = int(quota_x * spec.dataset_bytes) if quota_x else None
+    overrides.setdefault("observer", trace_observer())
     shards = shard_count()
     if shards > 1:
         cfg = EngineConfig.scaled(engine, spec.dataset_bytes // shards,

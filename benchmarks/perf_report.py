@@ -5,12 +5,25 @@
 Besides printing the markdown table, the report appends its rows to the
 repo-root ``BENCH_adaptive.json`` trajectory file (``common.
 persist_trajectory``) so perf history survives across runs.
+
+A second table reports tail latency: p50/p95/p99 per op-class histogram
+from the observability metrics registry (DESIGN.md §11), measured on a
+fresh observed load+update run per engine and persisted to the
+``BENCH_obs.json`` trajectory.
 """
 
 from __future__ import annotations
 
-from .common import persist_trajectory
+from .common import persist_trajectory, trajectory_path
 from .roofline import BASELINE, OPTIMIZED, analyze, load_cells
+
+OBS_TRAJECTORY = "BENCH_obs.json"
+# op-class histograms worth tracking release-over-release (the rest stay
+# inspectable via `python -m repro.obs summarize` on a --trace dump)
+OBS_HISTS = ("write_us", "multi_get_us", "stall_us", "flush_us",
+             "compact_us", "gc_us", "gc_rewrite_bytes",
+             "gc_reclaimed_bytes")
+OBS_ENGINES = ("rocksdb", "scavenger", "scavenger_adaptive")
 
 
 def pairs():
@@ -44,6 +57,32 @@ def report_rows() -> list[dict]:
     return rows
 
 
+def obs_rows(engines=OBS_ENGINES) -> list[dict]:
+    """Tail-latency rows — p50/p95/p99 per op-class histogram, merged
+    across shards, from an observed load+update run per engine."""
+    from repro.obs import Observer
+    from repro.workloads import mixed_8k
+
+    from .common import ds_bytes, load_update
+
+    rows = []
+    for engine in engines:
+        obs = Observer()
+        st = load_update(engine, mixed_8k(dataset_bytes=ds_bytes(4)),
+                         observer=obs)
+        st["runner"].read(512)          # populate multi_get_us
+        obs.finish()
+        for name in OBS_HISTS:
+            h = obs.metrics.merged(name)
+            if not h.count:
+                continue
+            rows.append({"engine": engine, "metric": name,
+                         "count": h.count, "mean": h.mean,
+                         "p50": h.quantile(0.50), "p95": h.quantile(0.95),
+                         "p99": h.quantile(0.99)})
+    return rows
+
+
 def main():
     rows = report_rows()
     print("| cell | mesh | term | baseline | optimized | x |")
@@ -54,6 +93,16 @@ def main():
               f"{r['baseline']:.4g} | {r['optimized']:.4g} | {x} |")
     path = persist_trajectory("perf_report", rows)
     print(f"# trajectory appended to {path}")
+    orows = obs_rows()
+    print("| engine | metric | count | mean | p50 | p95 | p99 |")
+    print("|---|---|---|---|---|---|---|")
+    for r in orows:
+        print(f"| {r['engine']} | {r['metric']} | {r['count']} | "
+              f"{r['mean']:.4g} | {r['p50']:.4g} | {r['p95']:.4g} | "
+              f"{r['p99']:.4g} |")
+    opath = persist_trajectory("obs_tails", orows,
+                               path=trajectory_path(OBS_TRAJECTORY))
+    print(f"# obs trajectory appended to {opath}")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,11 @@ def main() -> None:
                     help="run workloads against a ShardedStore of N shards")
     ap.add_argument("--shard-policy", choices=("hash", "range"),
                     default=None)
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="attach an observer to every store and dump one "
+                         "observability directory per module under DIR "
+                         "(events/metrics/health + Chrome trace JSON; see "
+                         "python -m repro.obs)")
     args = ap.parse_args()
     if args.list:
         list_modules()
@@ -64,6 +69,8 @@ def main() -> None:
         os.environ["REPRO_SHARDS"] = str(args.shards)
     if args.shard_policy is not None:
         os.environ["REPRO_SHARD_POLICY"] = args.shard_policy
+    if args.trace is not None:
+        os.environ["REPRO_TRACE_DIR"] = args.trace
     names = args.modules or MODULES
     print("name,us_per_call,derived")
     failures = 0
@@ -74,6 +81,10 @@ def main() -> None:
             for r in mod.run():
                 print(f"{r['name']},{r['us_per_call']},{r['derived']}",
                       flush=True)
+            from benchmarks import common
+            out = common.dump_trace(name)
+            if out is not None:
+                print(f"# {name} trace -> {out}", flush=True)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1

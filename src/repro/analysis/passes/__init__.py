@@ -10,7 +10,8 @@ each module is one architectural invariant:
   * ``kernel_parity``     — kernel packages ship kernel/ref/ops + test (§5)
   * ``config_discipline`` — numeric knobs live in EngineConfig (§3)
   * ``docs``              — docstrings cite real DESIGN sections
+  * ``obs_purity``        — repro.obs is a read-only tap (§11)
 """
 
 from . import (config_discipline, docs, durability, io_accounting,  # noqa: F401
-               kernel_parity, purity, vectorization)
+               kernel_parity, obs_purity, purity, vectorization)

@@ -1,0 +1,119 @@
+"""obs-purity: the observability layer is a read-only tap (DESIGN.md §11).
+
+``repro.obs`` is handed live ``Store`` objects so it can read clocks,
+counters, and the version — but the whole point of the ``NullObserver``
+byte-parity contract is that *watching the accounting must not change it*.
+Three things would break that silently:
+
+  * calling a clock-advancing / mutating method on a store (or anything
+    reached through a function parameter): ``io.seq_write``, ``stall``,
+    ``write``, ``pump`` … — the observer would charge simulated time;
+  * assigning state rooted at a parameter (``store.x = …``,
+    ``store.io.lanes[k] = …``) — the observer would mutate the observed;
+  * importing ``repro.core`` at module scope — the tap must stay
+    dependency-free of the substrate it watches (core imports obs for the
+    ``NULL_OBSERVER`` default; a back-import is a cycle waiting to happen).
+
+Observer-local state (``self.…``) and host-side file output
+(``dump_json``) are of course fine — that is what the layer is for.
+
+Escape hatch: ``# scavlint: allow-obs-impure <why>`` on the offending
+line, the line above, or the enclosing ``def`` line.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, attr_root, called_attr, register
+
+# Methods that advance the simulated device or mutate store/version state:
+# calling any of these on an object reached through a parameter means the
+# observer changed what it was measuring.  (Generic container names like
+# ``get`` are deliberately absent — dict.get on a parameter is everywhere
+# in export/summary code and a scalar Store.get routes through multi_get,
+# which is listed.)
+CLOCK_CALLS = ("seq_write", "seq_read", "rand_read", "cache_hit", "stall",
+               "batched", "write", "put", "delete", "scan",
+               "multi_get", "multi_scan", "_write_arrays", "flush", "drain",
+               "pump", "settle", "run_job", "rotate_memtable", "checkpoint",
+               "arm_crash", "add_l0", "set_level", "add_value_file",
+               "retire_value_file", "expose_garbage", "build_value_files",
+               "_log_edit", "log_edit")
+
+
+def _param_names(fn) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    for p in (a.vararg, a.kwarg):
+        if p is not None:
+            names.append(p.arg)
+    return set(names) - {"self", "cls"}
+
+
+@register
+class ObsPurityPass(Pass):
+    name = "obs-purity"
+    description = ("repro.obs reads stores; it may not advance clocks, "
+                   "mutate store state, or import repro.core")
+    allow_token = "allow-obs-impure"
+
+    def scope(self, rel: str) -> bool:
+        return rel.startswith("src/repro/obs/")
+
+    def check(self, sf):
+        yield from self._check_imports(sf)
+        for fn in ast.walk(sf.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_fn(sf, fn)
+
+    def _check_imports(self, sf):
+        hint = ("repro.obs must stay import-free of repro.core; take live "
+                "objects as arguments instead")
+        for node in sf.tree.body:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[:2] == ["repro", "core"]:
+                        yield self.finding(
+                            sf, node,
+                            f"module-scope import of {alias.name}", hint=hint)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level == 0 and \
+                        mod.split(".")[:2] == ["repro", "core"] or \
+                        node.level >= 2:
+                    yield self.finding(
+                        sf, node,
+                        f"module-scope import reaching outside repro.obs "
+                        f"({'.' * node.level}{mod})", hint=hint)
+
+    def _check_fn(self, sf, fn):
+        params = _param_names(fn)
+        if not params:
+            return
+        hint = ("the observer is a read-only tap (DESIGN.md §11): read "
+                "clocks/counters, keep state on self")
+        for node in ast.walk(fn):
+            targets = []
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+            elif isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            elif isinstance(node, ast.Delete):
+                targets = node.targets
+            for t in targets:
+                if isinstance(t, (ast.Attribute, ast.Subscript)) and \
+                        attr_root(t) in params:
+                    yield self.finding(
+                        sf, node,
+                        f"{fn.name}() assigns state rooted at parameter "
+                        f"{attr_root(t)!r}", hint=hint)
+            if isinstance(node, ast.Call):
+                attr = called_attr(node)
+                if attr in CLOCK_CALLS and attr_root(node.func) in params:
+                    yield self.finding(
+                        sf, node,
+                        f"{fn.name}() calls clock-advancing/mutating "
+                        f"method {attr}() on parameter "
+                        f"{attr_root(node.func)!r}", hint=hint)

@@ -30,7 +30,6 @@ mid-compaction, mid-GC before/after the chain update).
 
 from __future__ import annotations
 
-import dataclasses
 import json
 from pathlib import Path
 
@@ -69,8 +68,15 @@ class Durability:
         self.epoch = epoch
         self._next_snap = next_snap
         self._wal: WalWriter | None = None
+        self._wal_bytes_closed = 0      # rolled-segment total (health sampler)
         if wal:
             self._open_segment(epoch)
+
+    @property
+    def wal_bytes_written(self) -> int:
+        """Host-side WAL bytes across all segments this manager wrote."""
+        live = self._wal.bytes_written if self._wal is not None else 0
+        return self._wal_bytes_closed + live
 
     # ----------------------------------------------------------- lifecycle
     @classmethod
@@ -86,7 +92,9 @@ class Durability:
                 f"{mpath} exists; use Store.open()/ShardedStore.open() to "
                 "recover an existing durable store")
         man = ManifestWriter(mpath)
-        man.edit("config", cfg=dataclasses.asdict(cfg), **(meta or {}))
+        # state_dict, not asdict: the live observer hook (repro.obs) is
+        # process state and must not leak into the JSON config edit
+        man.edit("config", cfg=cfg.state_dict(), **(meta or {}))
         return cls(root, man, wal, epoch=0, next_snap=1)
 
     @classmethod
@@ -109,6 +117,7 @@ class Durability:
     # ------------------------------------------------------------- logging
     def _open_segment(self, epoch: int) -> None:
         if self._wal is not None:
+            self._wal_bytes_closed += self._wal.bytes_written
             self._wal.close()
         self.epoch = epoch
         fname = f"wal-{epoch:06d}.log"
@@ -157,22 +166,30 @@ class Durability:
 
 
 # ================================================================ recovery
-def recover_store(path: Path | str, io=None, cls=None):
+def recover_store(path: Path | str, io=None, cls=None, observer=None):
     """MANIFEST-then-WAL recovery of a single durable ``Store``.
 
     ``path`` may be a bare snapshot file (restore only) or a durable
     directory (restore latest intact checkpoint, then replay the WAL tail
     through the columnar write path).  The recovered store is re-attached
-    to the directory, continuing in a fresh WAL segment."""
+    to the directory, continuing in a fresh WAL segment.
+
+    ``observer`` (repro.obs, DESIGN.md §11) attaches an Observer to the
+    recovered store *before* replay, so the recovery run emits a replay
+    timeline: ``recovery_begin`` / ``checkpoint_restored`` /
+    ``replay_segment`` instants plus the replayed ops' own spans, followed
+    by ``recovery_end``."""
     from ..store import Store
     cls = cls or Store
     root = Path(path)
     if root.is_file():
-        return snapshot.restore(root, io=io, cls=cls)
+        store = snapshot.restore(root, io=io, cls=cls)
+        _attach_observer(store, observer)
+        return store
     edits = read_manifest(root / Durability.MANIFEST)
     if not edits:
         raise FileNotFoundError(f"no durable store at {root}")
-    store, wal_from = None, 0
+    store, wal_from, ckpt_file = None, 0, None
     for e in reversed(edits):
         if e.kind == "checkpoint":
             try:
@@ -181,16 +198,36 @@ def recover_store(path: Path | str, io=None, cls=None):
             except IOError:
                 continue               # torn snapshot: fall back further
             wal_from = int(e.data["wal_epoch"])
+            ckpt_file = e.data["file"]
             break
     if store is None:
         cfg_edit = next(e for e in edits if e.kind == "config")
         from ..engine.config import EngineConfig
         store = cls(EngineConfig(**cfg_edit.data["cfg"]), io=io)
+    obs = _attach_observer(store, observer)
+    obs.instant(store, "recovery_begin", src=str(root))
+    if ckpt_file is not None:
+        obs.instant(store, "checkpoint_restored", file=ckpt_file,
+                    wal_epoch=wal_from)
     for e in edits:
         if e.kind == "wal_segment" and int(e.data["epoch"]) >= wal_from:
-            replay_into(store, read_wal(root / e.data["file"]))
+            records = read_wal(root / e.data["file"])
+            obs.instant(store, "replay_segment", file=e.data["file"],
+                        n_records=len(records))
+            applied = replay_into(store, records)
+            obs.on_op(store, "replay_records", applied)
+    obs.instant(store, "recovery_end", wal_index=int(store.wal_index))
     store.durability = Durability.attach(root)
     return store
+
+
+def _attach_observer(store, observer):
+    """Point a recovered store at ``observer`` (its persisted config never
+    carries one); returns the store's live observer hook."""
+    if observer is not None:
+        store.obs = observer
+        store.obs_label = observer.register_store(store)
+    return store.obs
 
 
 def manifest_summary(path: Path | str) -> dict:

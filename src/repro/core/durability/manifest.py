@@ -62,10 +62,14 @@ class ManifestWriter:
     def __init__(self, path: Path | str):
         self.path = Path(path)
         self._fh = open(self.path, "ab")
+        # host-side file size (bytes), surfaced by the health sampler
+        # (repro.obs, DESIGN.md §11)
+        self.bytes_written = self._fh.tell()
 
     def append(self, edit: VersionEdit) -> None:
         append_record(self._fh, "e", edit.encode())
         self._fh.flush()
+        self.bytes_written = self._fh.tell()
 
     def edit(self, kind: str, **data) -> None:
         self.append(VersionEdit(kind, data))

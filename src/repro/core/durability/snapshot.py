@@ -126,7 +126,9 @@ def snapshot_state(store) -> tuple[dict, dict]:
     dev = dataclasses.asdict(io.device)
     meta = {
         "format": FORMAT,
-        "cfg": dataclasses.asdict(store.cfg),
+        # state_dict, not asdict: the live observer hook (repro.obs) is
+        # process state, never snapshot payload
+        "cfg": store.cfg.state_dict(),
         "seq": int(store.seq),
         "next_vid": int(store.next_vid),
         "wal_index": int(store.wal_index),

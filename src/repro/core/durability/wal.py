@@ -53,10 +53,14 @@ class WalWriter:
     def __init__(self, path: Path | str):
         self.path = Path(path)
         self._fh = open(self.path, "ab")
+        # host-side segment size (bytes), surfaced by the health sampler
+        # (repro.obs, DESIGN.md §11)
+        self.bytes_written = self._fh.tell()
 
     def _append(self, key: str, idx: int, body: bytes) -> None:
         append_record(self._fh, key, _IDX_HDR.pack(int(idx)) + body)
         self._fh.flush()
+        self.bytes_written = self._fh.tell()
 
     def append_batch(self, idx: int, seq_base: int, kinds, keys,
                      vsizes) -> None:

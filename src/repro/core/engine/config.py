@@ -109,6 +109,15 @@ class EngineConfig:
     temp_cold_mult: float = 0.5             # cold: rate <= mult * mean rate
     adaptive_residual_floor: float = 0.1    # min residual lifetime, frac of mean
 
+    # ---- observability (repro.obs, DESIGN.md §11) ----
+    # Hook object receiving spans/metrics/health ticks from the core; None
+    # resolves to the no-op NullObserver (observability-off runs are
+    # byte-identical to un-instrumented ones).  Excluded from persistence:
+    # ``state_dict()`` strips it, so MANIFEST config edits and snapshots
+    # stay JSON and a recovered store starts unobserved (re-attach via
+    # ``Store.open(..., observer=...)``).
+    observer: object | None = None
+
     def __post_init__(self):
         # lazy import: the strategy modules import table/IO substrate, which
         # imports this module — resolving at construction breaks the cycle
@@ -157,6 +166,16 @@ class EngineConfig:
             raise ValueError(
                 "need 0 <= temp_cold_mult < temp_hot_mult, got "
                 f"{self.temp_cold_mult} / {self.temp_hot_mult}")
+
+    # -------------------------------------------------------- serialization
+    def state_dict(self) -> dict:
+        """JSON-serializable field dict for MANIFEST/snapshot persistence.
+
+        The live ``observer`` hook object is process state, not
+        configuration — it is stripped here (and defaults to None when the
+        dict is fed back through ``EngineConfig(**d)`` on recovery)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self) if f.name != "observer"}
 
     # ------------------------------------------------------------ properties
     @property

@@ -172,6 +172,7 @@ class SimIO:
     def snapshot(self) -> dict:
         return {
             "clock_us": self.clock_us,
+            "lanes": dict(self.lanes),
             "read_bytes": dict(self.read_bytes),
             "write_bytes": dict(self.write_bytes),
             "read_ops": dict(self.read_ops),
@@ -183,10 +184,13 @@ class SimIO:
     def delta(after: dict, before: dict) -> dict:
         out = {}
         for field in ("read_bytes", "write_bytes", "read_ops", "write_ops",
-                      "time_us"):
+                      "time_us", "lanes"):
+            # .get({}) keeps old lane-less snapshots (pre-§11) subtractable
+            af = after.get(field, {})
+            bf = before.get(field, {})
             out[field] = {
-                k: after[field].get(k, 0) - before[field].get(k, 0)
-                for k in set(after[field]) | set(before[field])
+                k: af.get(k, 0) - bf.get(k, 0)
+                for k in set(af) | set(bf)
             }
         out["clock_us"] = after["clock_us"] - before["clock_us"]
         return out

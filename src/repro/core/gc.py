@@ -110,7 +110,13 @@ def run_gc(store, candidates: list[SSTable]) -> None:
         #                                      MANIFEST, run counter not yet
 
         store.n_gc_runs += 1
-        store.gc_reclaimed_bytes += sum(t.file_bytes for t in candidates) \
-            - sum(t.file_bytes for t in new_files)
+        rewrite = sum(t.file_bytes for t in new_files)
+        reclaimed = sum(t.file_bytes for t in candidates) - rewrite
+        store.gc_reclaimed_bytes += reclaimed
+        # per-job observability (DESIGN.md §11): the distribution of
+        # rewrite/reclaim bytes per GC run is the paper's Fig.3 axis
+        store.obs.on_op(store, "gc_rewrite_bytes", rewrite)
+        store.obs.on_op(store, "gc_reclaimed_bytes", reclaimed)
+        store.obs.on_op(store, "gc_input_files", len(candidates))
     finally:
         store.in_gc = False

@@ -232,11 +232,16 @@ class FleetScheduler:
             if picked is None:
                 continue
             shard = self.shards[picked[0]]
-            shard.io.lanes[lane] = max(shard.io.lanes[lane],
-                                       shard.io.fg_clock_us)
+            t_lane = shard.io.lanes[lane]
+            shard.io.lanes[lane] = max(t_lane, shard.io.fg_clock_us)
+            # both jumps happen outside any shard span (run_one is called
+            # from the fleet quota path, before per-shard write dispatch),
+            # so each is recorded for lane tiling (DESIGN.md §11)
+            shard.obs.lane_sync(shard, lane, t_lane)
             shard.run_job(picked[1], lane)
-            shard.io.lanes["fg"] = max(shard.io.fg_clock_us,
-                                       shard.io.lanes[lane])
+            t_fg = shard.io.fg_clock_us
+            shard.io.lanes["fg"] = max(t_fg, shard.io.lanes[lane])
+            shard.obs.lane_sync(shard, "fg", t_fg)
             return True
         return False
 
@@ -253,4 +258,6 @@ class FleetScheduler:
         for s in self.shards:
             m = max(s.io.lanes.values())
             for k in s.io.lanes:
+                t0 = s.io.lanes[k]
                 s.io.lanes[k] = m
+                s.obs.lane_sync(s, k, t0)

@@ -126,6 +126,12 @@ class ShardedStore(ScalarOps):
             space_quota_bytes=fleet_quota,
             soft_quota_frac=cfg.soft_quota_frac)
         self.io = FleetClock(self.shards)
+        # Fleet-level observability hook (DESIGN.md §11): shares the shards'
+        # observer (same ref after dataclasses.replace) but is NOT registered
+        # as a store — FleetClock has no lanes to tile; per-shard spans carry
+        # the timing, the fleet only emits fleet-scoped op metrics.
+        self.obs = self.shards[0].obs
+        self.obs_label = "fleet"
         # Fleet durability (DESIGN.md §9): one fleet-level op journal (the
         # scheduler is fleet-wide, so replay must re-route batches through
         # the fleet, not per shard) + one manifest/snapshot dir per shard.
@@ -201,14 +207,18 @@ class ShardedStore(ScalarOps):
                 if not self.fleet.run_one(prefer_gc=True):
                     break
             for s, b in zip(self.shards, before):
-                s.stall_us += s.io.fg_clock_us - b
+                stalled = s.io.fg_clock_us - b
+                s.stall_us += stalled
+                s.obs.on_stall(s, stalled, "write_stall")
         else:
             # one slowdown per write call (Store semantics), charged to the
             # shard holding the fleet wall clock so aggregate stall_s stays
             # comparable between --shards 1 and --shards N runs
             s = max(self.shards, key=lambda s: s.io.fg_clock_us)
-            s.io.stall(s.cfg.slowdown_us_per_write)
+            with s.obs.span(s, "quota_slowdown"):
+                s.io.stall(s.cfg.slowdown_us_per_write)
             s.stall_us += s.cfg.slowdown_us_per_write
+            s.obs.on_stall(s, s.cfg.slowdown_us_per_write, "quota_slowdown")
             self.fleet.pump()
 
     # -------------------------------------------------------- batched reads
@@ -333,13 +343,16 @@ class ShardedStore(ScalarOps):
                 s.close()
 
     @classmethod
-    def open(cls, path) -> "ShardedStore":
+    def open(cls, path, observer=None) -> "ShardedStore":
         """Recover a fleet: rebuild the ShardedStore from the fleet
         MANIFEST, restore every shard's latest snapshot plus the scheduler
         state at the same fleet epoch, then replay the fleet journal tail
         through the fleet write path.  With ``n_shards=1`` the result is
         byte-identical to single-``Store`` recovery (``tests/
-        test_durability.py``)."""
+        test_durability.py``).
+
+        ``observer`` (repro.obs, DESIGN.md §11) attaches to every recovered
+        shard before replay so the replayed ops emit spans."""
         from pathlib import Path
         from ..durability import (Durability, read_manifest, read_wal,
                                   replay_into, snapshot as dsnap)
@@ -370,9 +383,30 @@ class ShardedStore(ScalarOps):
             self.fleet.load_state(ck.data["scheduler"])
             self.wal_index = int(ck.data["wal_index"])
             wal_from = int(ck.data["wal_epoch"])
+        if observer is not None:
+            for s in self.shards:
+                s.obs = observer
+                s.obs_label = observer.register_store(s)
+            self.obs = observer
+            # fleet recovery timeline, mirroring durability.recover_store:
+            # fleet-level instants land on shard 0's track, the per-shard
+            # snapshot restores on each shard's own
+            self.obs.instant(self.shards[0], "recovery_begin",
+                             src=str(root))
+            if ckpts:
+                for i, s in enumerate(self.shards):
+                    self.obs.instant(s, "checkpoint_restored",
+                                     file=ck.data["shard_snaps"][i],
+                                     wal_epoch=wal_from)
         for e in edits:
             if e.kind == "wal_segment" and int(e.data["epoch"]) >= wal_from:
-                replay_into(self, read_wal(root / e.data["file"]))
+                records = read_wal(root / e.data["file"])
+                self.obs.instant(self.shards[0], "replay_segment",
+                                 file=e.data["file"],
+                                 n_records=len(records))
+                replay_into(self, records)
+        self.obs.instant(self.shards[0], "recovery_end",
+                         wal_index=int(self.wal_index))
         self.durability = Durability.attach(root, wal=True)
         for i, s in enumerate(self.shards):
             s.durability = Durability.attach(root / f"shard-{i:02d}",

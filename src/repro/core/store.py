@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..obs import NULL_OBSERVER
 from . import compaction as comp
 from . import gc as gcmod
 from .batch import OP_PUT, ScalarOps, WriteBatch
@@ -94,6 +95,13 @@ class Store(ScalarOps):
         self.gc_reclaimed_bytes = 0
         self.stall_us = 0.0
 
+        # Observability (repro.obs, DESIGN.md §11): one hook object for
+        # spans/metrics/health.  The default NullObserver no-ops every hook
+        # and never touches the simulated device, so observer-off runs stay
+        # byte-identical to the goldens.
+        self.obs = cfg.observer if cfg.observer is not None else NULL_OBSERVER
+        self.obs_label = self.obs.register_store(self)
+
     @property
     def valid_bytes(self) -> int:
         return self.latest.valid_bytes
@@ -119,54 +127,65 @@ class Store(ScalarOps):
         vids_out = np.zeros(n, np.uint64)
         if n == 0:
             return vids_out
-        self._write_pressure()
-        is_put = kinds == OP_PUT
-        recs = np.where(is_put, cfg.key_bytes + vsizes + cfg.wal_rec_overhead,
-                        cfg.key_bytes + cfg.wal_rec_overhead).astype(np.int64)
-        total = int(recs.sum())
-        seqs = np.uint64(self.seq + 1) + np.arange(n, dtype=np.uint64)
-        self.seq += n
-        nput = int(is_put.sum())
-        vids_out[is_put] = (np.uint64(self.next_vid)
-                            + np.arange(nput, dtype=np.uint64))
-        self.next_vid += nput
-        self.io.seq_write(total, sio.CAT_WAL)   # one group-committed append
-        if self.durability is not None:
-            # host-side persistence of the same batch the simulated WAL
-            # append just charged; costs zero simulated time (DESIGN.md §9)
-            self.wal_index += 1
-            self.durability.log_batch(self.wal_index, self.seq - n + 1,
-                                      kinds, keys, vsizes)
-        if self._crash_hooks is not None:
-            self._crashpoint("after_wal")
-        self.user_write_bytes += total
-        self.n_user_ops += n
+        # the span covers every foreground advance this batch causes —
+        # admission stalls, the WAL append, memtable stalls, delayed-write
+        # throttling — so fg-track spans tile the fg lane clock (§11)
+        with self.obs.span(self, "write", n=n):
+            self._write_pressure()
+            is_put = kinds == OP_PUT
+            recs = np.where(is_put,
+                            cfg.key_bytes + vsizes + cfg.wal_rec_overhead,
+                            cfg.key_bytes
+                            + cfg.wal_rec_overhead).astype(np.int64)
+            total = int(recs.sum())
+            seqs = np.uint64(self.seq + 1) + np.arange(n, dtype=np.uint64)
+            self.seq += n
+            nput = int(is_put.sum())
+            vids_out[is_put] = (np.uint64(self.next_vid)
+                                + np.arange(nput, dtype=np.uint64))
+            self.next_vid += nput
+            self.io.seq_write(total, sio.CAT_WAL)  # one group-committed
+            #                                        append
+            self.obs.instant(self, "wal_append", nbytes=total, n=n)
+            if self.durability is not None:
+                # host-side persistence of the same batch the simulated WAL
+                # append just charged; costs zero simulated time (§9)
+                self.wal_index += 1
+                self.durability.log_batch(self.wal_index, self.seq - n + 1,
+                                          kinds, keys, vsizes)
+            if self._crash_hooks is not None:
+                self._crashpoint("after_wal")
+            self.user_write_bytes += total
+            self.n_user_ops += n
 
-        ety = np.where(is_put, ETYPE_INLINE, ETYPE_TOMB).astype(np.uint8)
-        vsz = np.where(is_put, vsizes, 0).astype(np.int64)
-        vf = np.full(n, -1, np.int64)
-        entry_bytes = self.memtable.entry_bytes_batch(ety, vsz)
-        self.in_batch_write = True
-        try:
-            i = 0
-            while i < n:
-                i += self.memtable.put_batch(keys[i:], seqs[i:], ety[i:],
-                                             vids_out[i:], vsz[i:], vf[i:],
-                                             entry_bytes[i:])
-                if self.memtable.full and i < n:
-                    self.immutables.append(self.memtable)
-                    self.memtable = Memtable(cfg)
-                    self.pump()
-                    self._stall_while(
-                        lambda: len(self.immutables) > cfg.max_immutables)
-        finally:
-            self.in_batch_write = False
+            ety = np.where(is_put, ETYPE_INLINE, ETYPE_TOMB).astype(np.uint8)
+            vsz = np.where(is_put, vsizes, 0).astype(np.int64)
+            vf = np.full(n, -1, np.int64)
+            entry_bytes = self.memtable.entry_bytes_batch(ety, vsz)
+            self.in_batch_write = True
+            try:
+                i = 0
+                while i < n:
+                    i += self.memtable.put_batch(keys[i:], seqs[i:], ety[i:],
+                                                 vids_out[i:], vsz[i:],
+                                                 vf[i:], entry_bytes[i:])
+                    if self.memtable.full and i < n:
+                        self.immutables.append(self.memtable)
+                        self.memtable = Memtable(cfg)
+                        self.pump()
+                        self._stall_while(
+                            lambda: len(self.immutables) > cfg.max_immutables)
+            finally:
+                self.in_batch_write = False
 
-        self.latest.apply_batch(is_put, keys, vids_out, vsz)
-        # workload observation (adaptive tracker; no-op for paper engines,
-        # costs no simulated time)
-        self.strategy.observe_batch(self, "write", keys, vsz)
-        self._after_write(total)
+            self.latest.apply_batch(is_put, keys, vids_out, vsz)
+            # workload observation (adaptive tracker; no-op for paper
+            # engines, costs no simulated time)
+            self.strategy.observe_batch(self, "write", keys, vsz)
+            self._after_write(total)
+        self.obs.on_op(self, "put_batch_n", n)
+        self.obs.on_op(self, "put_batch_bytes", total)
+        self.obs.tick(self)
         return vids_out
 
     # -------------------------------------------------------- batched reads
@@ -188,7 +207,7 @@ class Store(ScalarOps):
             self.wal_index += 1
             self.durability.log_reads(self.wal_index, keys)
         self.n_user_ops += n
-        with self.io.batched(n):
+        with self.obs.span(self, "multi_get", n=n), self.io.batched(n):
             res = self.lookup_entries(keys, sio.CAT_FG_READ)
             live = res["found"] & (res["etype"] != ETYPE_TOMB)
             refs = np.nonzero(live & (res["etype"] == ETYPE_REF))[0]
@@ -199,6 +218,8 @@ class Store(ScalarOps):
                                         strict=True)
         self.strategy.observe_batch(self, "read", keys)
         self.pump()
+        self.obs.on_op(self, "get_batch_n", n)
+        self.obs.tick(self)
         return {"found": live,
                 "vid": np.where(live, res["vid"], 0).astype(np.uint64),
                 "vsize": np.where(live, res["vsize"], 0),
@@ -217,10 +238,12 @@ class Store(ScalarOps):
             self.durability.log_scans(self.wal_index, starts, counts)
         self.n_user_ops += len(starts)
         out = []
-        with self.io.batched(len(starts)):
+        with self.obs.span(self, "multi_scan", n=len(starts)), \
+                self.io.batched(len(starts)):
             for s, c in zip(starts.tolist(), counts.tolist()):
                 out.append(rscan.scan_retry(self, int(s), int(c)))
         self.pump()
+        self.obs.tick(self)
         return out
 
     # ===================================================== background lanes
@@ -254,12 +277,15 @@ class Store(ScalarOps):
         prev_lane = self.io.lane
         self.io.lane = lane
         try:
-            if job[0] == "flush":
-                self._flush_job()
-            elif job[0] == "compact":
-                comp.run_compaction(self, *job[1])
-            else:
-                gcmod.run_gc(self, job[1])
+            # span on the job's lane: an injected CrashPoint still records
+            # the partial span (the with-block exits), keeping lane tiling
+            with self.obs.span(self, job[0], lane=lane):
+                if job[0] == "flush":
+                    self._flush_job()
+                elif job[0] == "compact":
+                    comp.run_compaction(self, *job[1])
+                else:
+                    gcmod.run_gc(self, job[1])
         finally:
             self.io.lane = prev_lane
 
@@ -293,12 +319,18 @@ class Store(ScalarOps):
                     job, lane = self.next_gc_job(), "gc"
             if job is None:
                 break
-            self.io.lanes[lane] = max(self.io.lanes[lane],
-                                      self.io.fg_clock_us)
+            t_lane = self.io.lanes[lane]
+            self.io.lanes[lane] = max(t_lane, self.io.fg_clock_us)
+            # the bg/gc jump is outside any job span — record it so the
+            # lane track still tiles; the fg jump below is inside the
+            # caller's write span, which already covers it (§11)
+            self.obs.lane_sync(self, lane, t_lane)
             self.run_job(job, lane)
             self.io.lanes["fg"] = max(self.io.fg_clock_us,
                                       self.io.lanes[lane])
-        self.stall_us += self.io.fg_clock_us - t0
+        stalled = self.io.fg_clock_us - t0
+        self.stall_us += stalled
+        self.obs.on_stall(self, stalled, "write_stall")
 
     def settle(self) -> None:
         """Let background catch up to the foreground clock (no fg time)."""
@@ -316,7 +348,9 @@ class Store(ScalarOps):
             self.run_job(job, lane)
         m = max(self.io.lanes.values())
         for k in self.io.lanes:
+            t0 = self.io.lanes[k]
             self.io.lanes[k] = m
+            self.obs.lane_sync(self, k, t0)
 
     # ========================================= durability (DESIGN.md §9)
     def checkpoint(self, path=None):
@@ -329,19 +363,24 @@ class Store(ScalarOps):
         directory."""
         if path is not None:
             from .durability import snapshot as dsnap
+            self.obs.instant(self, "checkpoint", path=str(path))
             return dsnap.write_snapshot(self, path)
         if self.durability is None:
             raise ValueError("store has no durability directory; pass a "
                              "snapshot path or open with durability_dir")
+        self.obs.instant(self, "checkpoint", seq=int(self.seq))
         return self.durability.checkpoint(self)
 
     @classmethod
-    def open(cls, path, io: SimIO | None = None) -> "Store":
+    def open(cls, path, io: SimIO | None = None,
+             observer=None) -> "Store":
         """Recover a store: restore the latest checkpoint snapshot, then
         replay the WAL tail through the columnar write path (``path`` may
-        also be a bare snapshot file — restore only)."""
+        also be a bare snapshot file — restore only).  ``observer``
+        attaches an Observer before replay so the recovery emits a replay
+        timeline (DESIGN.md §11)."""
         from .durability import recover_store
-        return recover_store(path, io=io, cls=cls)
+        return recover_store(path, io=io, cls=cls, observer=observer)
 
     def close(self) -> None:
         """Flush and close durable logs (no-op for in-memory stores)."""
@@ -391,6 +430,7 @@ class Store(ScalarOps):
             delay = rec_bytes / cfg.delayed_write_rate   # us at MB/s
             self.io.stall(delay)
             self.stall_us += delay
+            self.obs.on_stall(self, delay, "delayed_write")
             self.pump()
 
     def _write_pressure(self) -> None:
@@ -415,6 +455,8 @@ class Store(ScalarOps):
         else:
             self.io.stall(cfg.slowdown_us_per_write)
             self.stall_us += cfg.slowdown_us_per_write
+            self.obs.on_stall(self, cfg.slowdown_us_per_write,
+                              "quota_slowdown")
             self.pump()
 
     def _gc_threshold(self) -> float:

@@ -1,0 +1,5 @@
+"""Entry point for ``python -m repro.obs`` (see ``cli.py``)."""
+
+from .cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,193 @@
+"""``python -m repro.obs`` — summarize/convert/verify observability dumps
+(DESIGN.md §11).
+
+Works on the dump directories ``Observer.dump`` (and
+``benchmarks/run.py --trace=DIR``) produce::
+
+    summarize DIR   percentile table (p50/p95/p99) for every histogram
+    convert DIR     events.json -> trace.json (Chrome trace-event JSON)
+    check DIR       verify per-(shard, lane) span durations tile the
+                    recorded SimIO lane clocks (exit 1 on mismatch)
+    dashboard DIR   text dashboard: lane utilization, amplification
+                    breakdown, top span classes, health tail
+
+DIR may be a single dump directory (contains metrics.json) or a parent
+holding one dump directory per benchmark module.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .trace import SpanTracer, dump_chrome_trace
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def find_dumps(root: str) -> list[str]:
+    """Dump dirs under ``root`` (root itself, or its direct children)."""
+    if os.path.isfile(os.path.join(root, "metrics.json")):
+        return [root]
+    out = []
+    for name in sorted(os.listdir(root)):
+        d = os.path.join(root, name)
+        if os.path.isfile(os.path.join(d, "metrics.json")):
+            out.append(d)
+    if not out:
+        raise SystemExit(f"no observability dumps under {root} "
+                         "(expected metrics.json)")
+    return out
+
+
+def _fmt(v: float) -> str:
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}M"
+    if v >= 1e4:
+        return f"{v / 1e3:.1f}k"
+    return f"{v:.2f}" if isinstance(v, float) else str(v)
+
+
+def _label_str(labels: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+
+
+def summarize(dirs: list[str], out=None) -> None:
+    out = out or sys.stdout
+    for d in dirs:
+        metrics = _load(os.path.join(d, "metrics.json"))
+        print(f"== {d} ==", file=out)
+        hdr = (f"{'metric':<28} {'labels':<40} {'count':>8} {'mean':>10} "
+               f"{'p50':>10} {'p95':>10} {'p99':>10}")
+        print(hdr, file=out)
+        for name in sorted(metrics):
+            for s in metrics[name]:
+                if s.get("type") != "hist":
+                    continue
+                mean = s["total"] / s["count"] if s["count"] else 0.0
+                print(f"{name:<28} {_label_str(s['labels']):<40} "
+                      f"{s['count']:>8} {_fmt(mean):>10} "
+                      f"{_fmt(s['p50']):>10} {_fmt(s['p95']):>10} "
+                      f"{_fmt(s['p99']):>10}", file=out)
+        counters = [(n, s) for n in sorted(metrics) for s in metrics[n]
+                    if s.get("type") == "counter"]
+        if counters:
+            print(f"{'counter':<28} {'labels':<40} {'value':>8}", file=out)
+            for name, s in counters:
+                print(f"{name:<28} {_label_str(s['labels']):<40} "
+                      f"{s['value']:>8}", file=out)
+
+
+def convert(dirs: list[str]) -> None:
+    for d in dirs:
+        tracer = SpanTracer.from_state(_load(os.path.join(d, "events.json")))
+        out = os.path.join(d, "trace.json")
+        dump_chrome_trace(tracer, out)
+        print(f"{out}: {len(tracer.events)} events, "
+              f"{tracer.dropped} dropped")
+
+
+def check(dirs: list[str], rtol: float = 1e-6) -> int:
+    """Verify span tiling: per-(shard, lane) span durations must sum to
+    the recorded final lane clocks within float tolerance."""
+    failures = 0
+    for d in dirs:
+        tracer = SpanTracer.from_state(_load(os.path.join(d, "events.json")))
+        sums = tracer.track_sums()
+        if tracer.dropped:
+            print(f"{d}: SKIP ({tracer.dropped} events dropped; "
+                  "tiling unverifiable)")
+            continue
+        dir_fail = 0
+        for shard, lanes in sorted(tracer.shard_lanes.items()):
+            for lane, want in lanes.items():
+                got = sums.get((shard, lane), 0.0)
+                ok = abs(got - want) <= rtol * max(abs(want), 1.0)
+                if not ok:
+                    dir_fail += 1
+                    print(f"{d}: FAIL shard {shard} lane {lane}: "
+                          f"spans sum to {got:.3f}us, clock {want:.3f}us")
+        if dir_fail == 0:
+            print(f"{d}: OK ({len(tracer.events)} events, "
+                  f"{len(tracer.shard_lanes)} shards)")
+        failures += dir_fail
+    return failures
+
+
+def _bar(frac: float, width: int = 30) -> str:
+    n = int(round(max(0.0, min(1.0, frac)) * width))
+    return "#" * n + "-" * (width - n)
+
+
+def dashboard(dirs: list[str], out=None) -> None:
+    out = out or sys.stdout
+    for d in dirs:
+        print(f"== {d} ==", file=out)
+        health = _load(os.path.join(d, "health.json"))["series"]
+        events = _load(os.path.join(d, "events.json"))
+        for shard in sorted(health):
+            series = health[shard]
+            if not series:
+                continue
+            last = series[-1]
+            eng = events.get("shard_meta", {}).get(shard, {}).get(
+                "engine", "?")
+            print(f"shard {shard} [{eng}]  clock "
+                  f"{last['clock_us'] / 1e6:.3f}s  "
+                  f"({len(series)} samples)", file=out)
+            for lane in ("fg", "bg", "gc"):
+                frac = last["lane_util"].get(lane, 0.0)
+                print(f"  {lane} lane util {_bar(frac)} {frac:6.1%}",
+                      file=out)
+            print(f"  space_amp {last['space_amp']:.3f}  "
+                  f"s_index {last['s_index']:.3f}  "
+                  f"exposed/valid {last['exposed_over_valid']:.3f}  "
+                  f"stall {last['stall_us'] / 1e6:.3f}s", file=out)
+            mix = last.get("temp_bytes", {})
+            tot = sum(mix.values()) or 1
+            if mix:
+                print("  vSST mix " + "  ".join(
+                    f"{k}={v / tot:.0%}" for k, v in sorted(mix.items())),
+                    file=out)
+            gr = last.get("garbage_ratio", {})
+            print(f"  garbage ratio p50 {gr.get('p50', 0):.3f}  "
+                  f"p90 {gr.get('p90', 0):.3f}  "
+                  f"max {gr.get('max', 0):.3f}", file=out)
+        # top span classes by total lane time
+        totals: dict[str, float] = {}
+        for ev in events.get("events", ()):
+            if ev["ph"] == "X":
+                totals[ev["name"]] = totals.get(ev["name"], 0.0) + ev["dur"]
+        if totals:
+            print("top span classes (total lane-us):", file=out)
+            for name, t in sorted(totals.items(), key=lambda kv: -kv[1])[:8]:
+                print(f"  {name:<16} {t:14.1f}", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for cmd in ("summarize", "convert", "check", "dashboard"):
+        p = sub.add_parser(cmd)
+        p.add_argument("dir", help="dump directory (or parent of dumps)")
+    args = ap.parse_args(argv)
+    dirs = find_dumps(args.dir)
+    if args.cmd == "summarize":
+        summarize(dirs)
+    elif args.cmd == "convert":
+        convert(dirs)
+    elif args.cmd == "dashboard":
+        dashboard(dirs)
+    else:
+        return 1 if check(dirs) else 0
+    return 0
+
+
+if __name__ == "__main__":          # pragma: no cover - exercised via main()
+    raise SystemExit(main())

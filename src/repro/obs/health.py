@@ -1,0 +1,98 @@
+"""Health sampler: periodic snapshots of derived store series
+(DESIGN.md §11).
+
+Every ``sample_every`` observer ticks (one tick per user batch op) the
+sampler derives one sample per store: space amplification and its
+breakdown (index-tree ``s_index``, exposed garbage over valid), the
+per-temperature vSST byte mix, the per-vSST garbage-ratio distribution,
+lane utilization, stall totals, and — for durable stores — WAL/MANIFEST
+host-side sizes.  Samples accumulate into a per-shard time series that
+benchmarks and the ``python -m repro.obs`` dashboard dump as
+``health.json``.
+
+Read-only by contract (the ``obs-purity`` scavlint pass): sampling calls
+only pure accessors — it never advances a clock or mutates store state.
+"""
+
+from __future__ import annotations
+
+import json
+
+TEMP_NAMES = {0: "cold", 1: "warm", 2: "hot"}
+
+
+def _garbage_quantile(ratios: list, q: float) -> float:
+    if not ratios:
+        return 0.0
+    s = sorted(ratios)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def sample_store(store) -> dict:
+    """One derived health sample from a ``Store`` (pure reads only)."""
+    io = store.io
+    lanes = dict(io.lanes)
+    clock = max(lanes.values())
+    temp_bytes: dict[str, int] = {}
+    ratios = []
+    for t in store.version.value_files.values():
+        name = TEMP_NAMES.get(getattr(t, "temperature", None), "none")
+        temp_bytes[name] = temp_bytes.get(name, 0) + int(t.file_bytes)
+        tot = int(t.total_value_bytes)
+        if tot > 0:
+            ratios.append(int(t.garbage_bytes) / tot)
+    wal_b = man_b = 0
+    dur = getattr(store, "durability", None)
+    if dur is not None:
+        man_b = getattr(dur.manifest, "bytes_written", 0)
+        wal_b = getattr(dur, "wal_bytes_written", 0)
+    return {
+        "clock_us": clock,
+        "lanes": lanes,
+        "lane_util": {k: (v / clock if clock else 0.0)
+                      for k, v in lanes.items()},
+        "space_bytes": store.space_bytes(),
+        "valid_bytes": store.valid_bytes,
+        "space_amp": store.space_amplification(),
+        "s_index": store.s_index(),
+        "exposed_over_valid": store.exposed_over_valid(),
+        "n_value_files": len(store.version.value_files),
+        "temp_bytes": temp_bytes,
+        "garbage_ratio": {
+            "mean": (sum(ratios) / len(ratios)) if ratios else 0.0,
+            "p50": _garbage_quantile(ratios, 0.50),
+            "p90": _garbage_quantile(ratios, 0.90),
+            "max": max(ratios) if ratios else 0.0,
+        },
+        "stall_us": store.stall_us,
+        "n_compactions": store.n_compactions,
+        "n_gc_runs": store.n_gc_runs,
+        "wal_bytes": wal_b,
+        "manifest_bytes": man_b,
+    }
+
+
+class HealthSampler:
+    def __init__(self, sample_every: int = 64):
+        self.sample_every = int(sample_every)
+        self.series: dict[str, list] = {}
+        self._ticks: dict[str, int] = {}
+
+    def tick(self, store, label: str) -> None:
+        n = self._ticks.get(label, 0) + 1
+        self._ticks[label] = n
+        if n % self.sample_every == 0:
+            self.sample(store, label)
+
+    def sample(self, store, label: str) -> dict:
+        s = sample_store(store)
+        s["tick"] = self._ticks.get(label, 0)
+        self.series.setdefault(label, []).append(s)
+        return s
+
+    def state_dict(self) -> dict:
+        return {"sample_every": self.sample_every, "series": self.series}
+
+    def dump_json(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.state_dict(), f, indent=1, sort_keys=True)

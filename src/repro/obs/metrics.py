@@ -1,0 +1,210 @@
+"""Counters, gauges, and mergeable log-bucket histograms (DESIGN.md §11).
+
+The registry gives every op class a tail-latency story: histograms bucket
+values into quarter-octave (``2**(1/NSUB)``-spaced) bins whose bounds are
+exact binary floats, so recording, merging, and quantile extraction are
+deterministic across shards and across merge orders.  Quantiles are upper
+bounds: ``quantile(q)`` returns the upper edge of the bucket holding the
+empirical q-quantile (clamped to the observed max), so the estimate ``e``
+of a true positive quantile ``t`` satisfies ``t <= e <= t * (1 + 1/NSUB)``.
+
+Merging adds integer bucket counts, which is exactly associative — the
+property tests in ``tests/test_obs.py`` lean on this to let per-shard
+registries collapse into a fleet view in any order.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+# Quarter-octave buckets: each bucket spans a 2**(1/4)-ish ratio; the
+# relative quantile overestimate is bounded by 1/NSUB = 25%.
+NSUB = 4
+
+
+def bucket_index(value: float) -> int:
+    """Map a positive float to its log-bucket index (exact, via frexp)."""
+    m, e = math.frexp(value)          # value = m * 2**e, m in [0.5, 1)
+    sub = int((m - 0.5) * 2 * NSUB)   # 0..NSUB-1, exact for binary floats
+    if sub >= NSUB:                   # guard m == 1.0-ulp rounding
+        sub = NSUB - 1
+    return e * NSUB + sub
+
+
+def bucket_upper(idx: int) -> float:
+    """Exact upper bound of bucket ``idx``: ``(NSUB+sub+1) * 2**(e-3)``."""
+    e, sub = divmod(idx, NSUB)
+    return (NSUB + sub + 1) * math.ldexp(1.0, e) / (2 * NSUB)
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n=1):
+        self.value += n
+
+    def state_dict(self):
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v):
+        self.value = v
+
+    def state_dict(self):
+        return {"type": "gauge", "value": self.value}
+
+
+class LogHist:
+    """Mergeable log-bucket histogram over non-negative floats.
+
+    Values ``<= 0`` land in a dedicated zero bucket (stall times and byte
+    deltas are frequently exactly zero); positive values go to quarter-
+    octave buckets with exact binary bounds (see module docstring).
+    """
+
+    __slots__ = ("buckets", "zeros", "count", "total", "vmin", "vmax")
+
+    def __init__(self):
+        self.buckets: dict[int, int] = {}
+        self.zeros = 0
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def record(self, value: float, n: int = 1):
+        value = float(value)
+        self.count += n
+        self.total += value * n
+        if value < self.vmin:
+            self.vmin = value
+        if value > self.vmax:
+            self.vmax = value
+        if value <= 0.0:
+            self.zeros += n
+        else:
+            idx = bucket_index(value)
+            self.buckets[idx] = self.buckets.get(idx, 0) + n
+
+    def merge(self, other: "LogHist") -> "LogHist":
+        self.count += other.count
+        self.total += other.total
+        self.zeros += other.zeros
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        for idx, n in other.buckets.items():
+            self.buckets[idx] = self.buckets.get(idx, 0) + n
+        return self
+
+    def quantile(self, q: float) -> float:
+        """Upper-bound estimate of the empirical q-quantile.
+
+        Walks buckets in value order until the cumulative count reaches
+        ``ceil(q * count)``; returns that bucket's upper edge clamped to
+        the observed [min, max] envelope.  Returns 0.0 on empty.
+        """
+        if self.count == 0:
+            return 0.0
+        rank = max(1, math.ceil(q * self.count))
+        seen = self.zeros
+        if seen >= rank:
+            return min(max(0.0, self.vmin), self.vmax)
+        for idx in sorted(self.buckets):
+            seen += self.buckets[idx]
+            if seen >= rank:
+                return max(self.vmin, min(bucket_upper(idx), self.vmax))
+        return self.vmax
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def state_dict(self):
+        return {
+            "type": "hist",
+            "count": self.count,
+            "total": self.total,
+            "zeros": self.zeros,
+            "min": self.vmin if self.count else None,
+            "max": self.vmax if self.count else None,
+            "buckets": {str(k): v for k, v in sorted(self.buckets.items())},
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "LogHist":
+        h = cls()
+        h.count = state["count"]
+        h.total = state["total"]
+        h.zeros = state["zeros"]
+        h.vmin = math.inf if state["min"] is None else state["min"]
+        h.vmax = -math.inf if state["max"] is None else state["max"]
+        h.buckets = {int(k): v for k, v in state["buckets"].items()}
+        return h
+
+
+def _key(name: str, labels: dict) -> tuple:
+    return (name,) + tuple(sorted(labels.items()))
+
+
+class MetricsRegistry:
+    """Name + label keyed collection of counters/gauges/histograms.
+
+    Labels are free-form (``engine=..., shard=...``); each distinct label
+    set is an independent series.  ``merged(name)`` collapses a histogram
+    across all label sets for fleet-level percentiles.
+    """
+
+    def __init__(self):
+        self._series: dict[tuple, object] = {}
+
+    def _get(self, cls, name, labels):
+        key = _key(name, labels)
+        m = self._series.get(key)
+        if m is None:
+            m = self._series[key] = cls()
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def hist(self, name: str, **labels) -> LogHist:
+        return self._get(LogHist, name, labels)
+
+    def merged(self, name: str) -> LogHist:
+        """Histogram for ``name`` merged across every label set."""
+        out = LogHist()
+        for (nm, *_), m in self._series.items():
+            if nm == name and isinstance(m, LogHist):
+                out.merge(m)
+        return out
+
+    def names(self) -> list[str]:
+        return sorted({k[0] for k in self._series})
+
+    def state_dict(self) -> dict:
+        out = {}
+        for key, m in sorted(self._series.items(), key=lambda kv: kv[0]):
+            name, *labels = key
+            out.setdefault(name, []).append(
+                {"labels": dict(labels), **m.state_dict()})
+        return out
+
+    def dump_json(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.state_dict(), f, indent=1, sort_keys=True)

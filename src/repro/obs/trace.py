@@ -1,0 +1,145 @@
+"""Span tracer on the simulated two-lane clock (DESIGN.md §11).
+
+Spans are recorded against the *simulated* per-lane clocks
+(``SimIO.lanes``), not wall time: a span's ``ts``/``dur`` are the lane
+clock at begin and the lane time it consumed.  Core instrumentation
+guarantees the tiling invariant — on every (shard, lane) track the
+recorded span durations sum to that shard's final ``io.lanes[lane]``
+(lane jumps from scheduler synchronization are themselves recorded as
+``lane_sync`` spans) — which is what lets ``make trace`` cross-check the
+exported trace against the device counters.
+
+Events live in a bounded ring buffer (oldest dropped first, drops
+counted) and export as Chrome trace-event JSON: one process per shard,
+one thread per lane, viewable in Perfetto / chrome://tracing.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+
+LANE_TIDS = {"fg": 0, "bg": 1, "gc": 2}
+
+# Default event cap: large enough that the bench workloads never drop
+# (dropping would break the track-sum cross-check), small enough to bound
+# memory at ~a few hundred MB worst case.
+DEFAULT_CAP = 1 << 20
+
+
+class SpanTracer:
+    """Bounded ring buffer of span ("X") and instant ("i") events."""
+
+    def __init__(self, cap: int = DEFAULT_CAP):
+        self.cap = int(cap)
+        self.events: deque = deque(maxlen=self.cap)
+        self.dropped = 0
+        # final per-shard lane clocks, filled by Observer.finish_store()
+        self.shard_lanes: dict[str, dict] = {}
+        self.shard_meta: dict[str, dict] = {}
+
+    def add(self, ev: dict) -> None:
+        if len(self.events) == self.cap:
+            self.dropped += 1
+        self.events.append(ev)
+
+    def span(self, name, lane, shard, ts, dur, args=None) -> None:
+        ev = {"name": name, "ph": "X", "lane": lane, "shard": str(shard),
+              "ts": ts, "dur": dur}
+        if args:
+            ev["args"] = args
+        self.add(ev)
+
+    def instant(self, name, lane, shard, ts, args=None) -> None:
+        ev = {"name": name, "ph": "i", "lane": lane, "shard": str(shard),
+              "ts": ts}
+        if args:
+            ev["args"] = args
+        self.add(ev)
+
+    # ------------------------------------------------------------ summaries
+    def track_sums(self) -> dict:
+        """Sum of span durations per (shard, lane) — the tiling check."""
+        out: dict[tuple, float] = {}
+        for ev in self.events:
+            if ev["ph"] != "X":
+                continue
+            key = (ev["shard"], ev["lane"])
+            out[key] = out.get(key, 0.0) + ev["dur"]
+        return out
+
+    def state_dict(self) -> dict:
+        return {
+            "cap": self.cap,
+            "dropped": self.dropped,
+            "shard_lanes": self.shard_lanes,
+            "shard_meta": self.shard_meta,
+            "events": list(self.events),
+        }
+
+    def dump_json(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.state_dict(), f)
+
+    @classmethod
+    def from_state(cls, state: dict) -> "SpanTracer":
+        t = cls(cap=state.get("cap", DEFAULT_CAP))
+        t.dropped = state.get("dropped", 0)
+        t.shard_lanes = state.get("shard_lanes", {})
+        t.shard_meta = state.get("shard_meta", {})
+        for ev in state.get("events", ()):
+            t.add(ev)
+        return t
+
+
+def chrome_trace(tracer: SpanTracer) -> dict:
+    """Convert a tracer to Chrome trace-event JSON (Perfetto-viewable).
+
+    One process per shard, one thread per lane; ts/dur are the simulated
+    lane clocks in microseconds, which Chrome's unit happens to match.
+    """
+    shards = sorted({ev["shard"] for ev in tracer.events}
+                    | set(tracer.shard_lanes))
+    pid_of = {s: i for i, s in enumerate(shards)}
+    out = []
+    for s in shards:
+        meta = tracer.shard_meta.get(s, {})
+        pname = f"shard {s}"
+        if meta.get("engine"):
+            pname += f" [{meta['engine']}]"
+        out.append({"name": "process_name", "ph": "M", "pid": pid_of[s],
+                    "tid": 0, "args": {"name": pname}})
+        out.append({"name": "process_sort_index", "ph": "M",
+                    "pid": pid_of[s], "tid": 0,
+                    "args": {"sort_index": pid_of[s]}})
+        for lane, tid in LANE_TIDS.items():
+            out.append({"name": "thread_name", "ph": "M", "pid": pid_of[s],
+                        "tid": tid, "args": {"name": f"{lane} lane"}})
+            out.append({"name": "thread_sort_index", "ph": "M",
+                        "pid": pid_of[s], "tid": tid,
+                        "args": {"sort_index": tid}})
+    for ev in tracer.events:
+        ce = {"name": ev["name"], "ph": ev["ph"],
+              "pid": pid_of[ev["shard"]], "tid": LANE_TIDS[ev["lane"]],
+              "ts": ev["ts"], "cat": ev["lane"]}
+        if ev["ph"] == "X":
+            ce["dur"] = ev["dur"]
+        else:
+            ce["s"] = "t"          # instant scope: thread
+        if "args" in ev:
+            ce["args"] = ev["args"]
+        out.append(ce)
+    return {
+        "traceEvents": out,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "clock": "simulated lane clocks (SimIO.lanes), us",
+            "dropped": tracer.dropped,
+            "shard_lanes": tracer.shard_lanes,
+        },
+    }
+
+
+def dump_chrome_trace(tracer: SpanTracer, path) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer), f)

@@ -155,7 +155,16 @@ class ServeEngine:
                 rids = np.array([a[0] for a in admitted], np.uint64)
                 sizes = np.array([a[1] * _PAGE_META_BYTES
                                   for a in admitted], np.int64)
+                t0 = self.meta.io.fg_clock_us
                 self.meta.write(WriteBatch().puts(rids, sizes))
+                # admission-path observability (DESIGN.md §11): simulated
+                # foreground latency of the metadata write on the serving
+                # critical path, plus the admitted page mix
+                obs = self.meta.obs
+                obs.on_op(self.meta, "admission_us",
+                          self.meta.io.fg_clock_us - t0)
+                obs.on_op(self.meta, "admission_pages",
+                          sum(a[1] for a in admitted))
 
     def _admit_hot(self, req: Request) -> bool:
         """Hot/cold extent placement for a request's pages.

@@ -38,7 +38,7 @@ def test_registry_has_all_passes():
     names = set(all_passes())
     assert names == {"durability-coverage", "hook-purity", "io-accounting",
                      "vectorization", "kernel-parity", "config-discipline",
-                     "docs-citation"}
+                     "docs-citation", "obs-purity"}
 
 
 def test_finding_key_is_line_independent():
@@ -136,6 +136,71 @@ def test_purity_allows_self_state_and_effectful_hooks():
 def test_purity_scope_is_engines_and_adaptive_engine():
     assert in_scope("hook-purity", "src/repro/core/adaptive/engine.py")
     assert not in_scope("hook-purity", "src/repro/core/store.py")
+
+
+# -------------------------------------------------------------- obs-purity
+BAD_OBS_CALL = """
+class Hook:
+    def on_op(self, store, name, value):
+        store.io.stall(10.0)
+        self.metrics[name] = value
+"""
+
+BAD_OBS_ASSIGN = """
+def sample(store):
+    store.io.lanes["fg"] = 0.0
+    return dict(store.io.lanes)
+"""
+
+BAD_OBS_IMPORT = """
+from repro.core.store import Store
+
+
+def f(store):
+    return store.stall_us
+"""
+
+GOOD_OBS = """
+import json
+
+
+def sample(store):
+    out = {}
+    out["fg"] = store.io.lanes.get("fg", 0.0)
+    out["stall"] = store.stall_us
+    return json.dumps(out)
+"""
+
+
+def test_obs_purity_flags_clock_advancing_call():
+    fs = check("obs-purity", BAD_OBS_CALL, "src/repro/obs/custom.py")
+    assert len(fs) == 1 and "stall()" in fs[0].message
+
+
+def test_obs_purity_flags_param_rooted_assign():
+    fs = check("obs-purity", BAD_OBS_ASSIGN, "src/repro/obs/custom.py")
+    assert len(fs) == 1 and "'store'" in fs[0].message
+
+
+def test_obs_purity_flags_core_import():
+    fs = check("obs-purity", BAD_OBS_IMPORT, "src/repro/obs/custom.py")
+    assert len(fs) == 1 and "repro.core" in fs[0].message
+
+
+def test_obs_purity_allows_reads_and_dict_get():
+    assert not check("obs-purity", GOOD_OBS, "src/repro/obs/custom.py")
+
+
+def test_obs_purity_suppression():
+    text = BAD_OBS_CALL.replace(
+        "store.io.stall(10.0)",
+        "store.io.stall(10.0)  # scavlint: allow-obs-impure test hook")
+    assert not check("obs-purity", text, "src/repro/obs/custom.py")
+
+
+def test_obs_purity_scope_is_obs_only():
+    assert not in_scope("obs-purity", "src/repro/core/store.py")
+    assert in_scope("obs-purity", "src/repro/obs/observer.py")
 
 
 # ---------------------------------------------------------- io-accounting

@@ -1,0 +1,390 @@
+"""Observability subsystem tests (DESIGN.md §11).
+
+Four contracts:
+
+  * **No-op parity** — a store built without an observer (the default
+    ``NULL_OBSERVER``) reproduces the PR-2 golden accounting byte-for-byte
+    on all seven engines, and attaching a real ``Observer`` changes
+    *nothing* about the accounting either (the tap never participates).
+  * **Tiling** — per-(shard, lane) span durations sum exactly to the final
+    ``SimIO.lanes`` clocks, on a single store and on a quota-stressed
+    fleet (every simulated microsecond is inside exactly one span).
+  * **Histogram math** — property tests: the log-bucket quantile is an
+    upper bound within ``1/NSUB`` relative error, and merging is exactly
+    associative on bucket counts and quantiles.
+  * **Recovery timeline** — ``Store.open(dir, observer=)`` emits the
+    ``recovery_begin → checkpoint_restored → replay_segment* →
+    recovery_end`` instant sequence across the §9 crash matrix, without
+    perturbing recovered state.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_support import HealthCheck, given, settings, st
+from test_refactor_parity import GOLDENS, run_fixed_workload
+
+from repro.core import (CrashPoint, ENGINES, EngineConfig, ShardedStore,
+                        Store, WriteBatch)
+from repro.obs import LogHist, NullObserver, Observer, SpanTracer
+from repro.obs.cli import main as obs_main
+from repro.obs.metrics import NSUB, bucket_index, bucket_upper
+
+N_KEYS = 2048
+VSIZES = np.array([64, 200, 600, 2000, 9000], np.int64)
+
+
+def _drive(store, groups: int = 20, seed: int = 0) -> None:
+    """Deterministic mixed workload exercising every instrumented path."""
+    rng = np.random.default_rng(seed)
+    for _ in range(groups):
+        keys = rng.integers(0, N_KEYS, 128).astype(np.uint64)
+        sizes = VSIZES[rng.integers(0, len(VSIZES), 128)]
+        store.write(WriteBatch().puts(keys, sizes))
+        store.write(WriteBatch().deletes(
+            rng.integers(0, N_KEYS, 8).astype(np.uint64)))
+        store.multi_get(rng.integers(0, N_KEYS, 48).astype(np.uint64))
+        store.multi_scan(rng.integers(0, N_KEYS, 4).astype(np.int64), 8)
+    store.drain()
+
+
+def _assert_tiles(obs: Observer, rtol: float = 1e-6) -> None:
+    obs.finish()
+    assert obs.tracer.dropped == 0
+    sums = obs.tracer.track_sums()
+    assert obs.tracer.shard_lanes, "finish() recorded no stores"
+    for shard, lanes in obs.tracer.shard_lanes.items():
+        for lane, want in lanes.items():
+            got = sums.get((shard, lane), 0.0)
+            assert got == pytest.approx(want, rel=rtol, abs=1e-6), \
+                (shard, lane, got, want)
+
+
+# ========================================================== no-op parity
+@pytest.mark.parametrize("engine", sorted(GOLDENS))
+def test_observer_off_matches_goldens(engine):
+    """Default (no observer) accounting is byte-identical to the golden
+    table captured before the observability layer existed."""
+    got = run_fixed_workload(engine)
+    want = GOLDENS[engine]
+    for field, val in want.items():
+        assert got[field] == pytest.approx(val, rel=0, abs=0), field
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_observer_on_changes_nothing(engine):
+    """An enabled Observer is a pure tap: stats with it attached are
+    byte-identical to an un-observed run, on all seven engines
+    (``scavenger_adaptive`` has no golden row; it compares run-vs-run)."""
+    got = run_fixed_workload(engine, observer=Observer(sample_every=16))
+    want = GOLDENS.get(engine) or run_fixed_workload(engine)
+    for field, val in want.items():
+        assert got[field] == pytest.approx(val, rel=0, abs=0), field
+
+
+def test_null_observer_is_constant_and_shared():
+    null = NullObserver()
+    ctx = null.span(None, "write")
+    assert ctx is null.span(None, "anything", lane="gc")
+    with ctx:
+        pass
+
+
+# ================================================================ tiling
+def test_single_store_spans_tile_lane_clocks():
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs)
+    store = Store(cfg)
+    _drive(store)
+    _assert_tiles(obs)
+    # ops and GC jobs actually got recorded
+    names = {ev["name"] for ev in obs.tracer.events}
+    assert {"write", "multi_get", "multi_scan", "flush"} <= names
+
+
+@pytest.mark.parametrize("quota", [None, 2 << 20])
+def test_fleet_spans_tile_lane_clocks(quota):
+    """Tiling holds across shards, including the fleet quota stall and
+    slowdown paths (force-run jobs + lane_sync jumps)."""
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled("scavenger_adaptive", 8 << 20,
+                              est_keys=N_KEYS, observer=obs,
+                              space_quota_bytes=quota)
+    fleet = ShardedStore(cfg, n_shards=3, shard_policy="range",
+                         key_space=N_KEYS)
+    _drive(fleet, groups=12)
+    _assert_tiles(obs)
+    assert len(obs.tracer.shard_lanes) == 3
+
+
+def test_tracer_ring_buffer_drops_oldest_and_counts():
+    t = SpanTracer(cap=4)
+    for i in range(7):
+        t.span(f"s{i}", "fg", "0", float(i), 1.0)
+    assert len(t.events) == 4 and t.dropped == 3
+    assert [ev["name"] for ev in t.events] == ["s3", "s4", "s5", "s6"]
+
+
+# ======================================================== histogram math
+def test_bucket_bounds_are_consistent():
+    """Buckets are [lower, upper): a power of two starts its own bucket."""
+    for v in (1e-9, 0.3, 1.0, 1.5, 7.0, 1e12):
+        idx = bucket_index(v)
+        assert bucket_upper(idx - 1) <= v < bucket_upper(idx)
+
+
+@settings(max_examples=200, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e9,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=200),
+       st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+def test_quantile_is_bounded_overestimate(values, q):
+    """t <= estimate <= t * (1 + 1/NSUB) for the true empirical quantile
+    t of positive samples (the §11 error bound)."""
+    h = LogHist()
+    for v in values:
+        h.record(v)
+    est = h.quantile(q)
+    values.sort()
+    import math
+    t = values[max(0, math.ceil(q * len(values)) - 1)]
+    assert t <= est <= t * (1 + 1 / NSUB) + 1e-12
+
+
+@settings(max_examples=100, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.lists(st.floats(min_value=0, max_value=1e9,
+                                   allow_nan=False, allow_infinity=False),
+                         max_size=50),
+                min_size=3, max_size=3))
+def test_merge_is_associative_on_counts_and_quantiles(parts):
+    """(a+b)+c == a+(b+c) on bucket counts, zeros, count, and every
+    quantile (float totals may differ in rounding; counts may not)."""
+    def hist(vals):
+        h = LogHist()
+        for v in vals:
+            h.record(v)
+        return h
+
+    a, b, c = (hist(p) for p in parts)
+    left = hist(parts[0]).merge(hist(parts[1])).merge(hist(parts[2]))
+    right = hist(parts[1]).merge(hist(parts[2]))
+    right = hist(parts[0]).merge(right)
+    assert left.buckets == right.buckets
+    assert left.zeros == right.zeros and left.count == right.count
+    for q in (0.5, 0.9, 0.99):
+        assert left.quantile(q) == right.quantile(q)
+
+
+def test_merged_registry_equals_single_hist():
+    """Per-shard histograms merged through the registry match one
+    histogram that saw every sample."""
+    obs = Observer()
+    rng = np.random.default_rng(3)
+    want = LogHist()
+    for shard in range(4):
+        store = type("S", (), {"cfg": type("C", (), {"engine": "x"})(),
+                               "obs_label": str(shard)})()
+        for v in rng.uniform(0.1, 1e6, 100):
+            obs.on_op(store, "lat_us", v)
+            want.record(v)
+    merged = obs.metrics.merged("lat_us")
+    assert merged.buckets == want.buckets
+    assert merged.count == want.count
+    for q in (0.5, 0.95, 0.99):
+        assert merged.quantile(q) == want.quantile(q)
+
+
+# ==================================================== export round-trip
+def test_dump_roundtrip_and_chrome_trace(tmp_path):
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs)
+    _drive(Store(cfg), groups=8)
+    paths = obs.dump(tmp_path / "dump")
+
+    # events round-trip: reloaded tracer reproduces the track sums
+    reloaded = SpanTracer.from_state(json.loads(
+        open(paths["events"]).read()))
+    assert reloaded.track_sums() == obs.tracer.track_sums()
+    assert reloaded.shard_lanes == obs.tracer.shard_lanes
+
+    # chrome trace: valid JSON, metadata + spans, lane threads
+    trace = json.loads(open(paths["trace"]).read())
+    evs = trace["traceEvents"]
+    assert {e["ph"] for e in evs} >= {"M", "X"}
+    x = [e for e in evs if e["ph"] == "X"]
+    assert all({"pid", "tid", "ts", "dur", "name"} <= set(e) for e in x)
+    assert {e["tid"] for e in x} <= {0, 1, 2}
+    # fg/bg/gc track durations sum to the recorded lane clocks
+    for lane, tid in (("fg", 0), ("bg", 1), ("gc", 2)):
+        got = sum(e["dur"] for e in x if e["tid"] == tid)
+        want = obs.tracer.shard_lanes["0"][lane]
+        assert got == pytest.approx(want, rel=1e-6, abs=1e-6)
+
+    # health dump has the derived series
+    health = json.loads(open(paths["health"]).read())
+    last = health["series"]["0"][-1]
+    for k in ("space_amp", "s_index", "lane_util", "temp_bytes",
+              "garbage_ratio", "wal_bytes", "manifest_bytes"):
+        assert k in last, k
+
+
+def test_cli_summarize_check_dashboard(tmp_path, capsys):
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs, space_quota_bytes=3 << 20)
+    _drive(Store(cfg), groups=10)
+    obs.dump(tmp_path / "run")
+
+    assert obs_main(["summarize", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    # acceptance: p50/p99 for at least multi_get latency, stall time,
+    # and GC rewrite bytes per job
+    assert "p50" in out and "p99" in out
+    for metric in ("multi_get_us", "stall_us", "gc_rewrite_bytes"):
+        assert metric in out, metric
+
+    assert obs_main(["check", str(tmp_path / "run")]) == 0
+    assert "OK" in capsys.readouterr().out
+
+    assert obs_main(["convert", str(tmp_path / "run")]) == 0
+    capsys.readouterr()
+    assert obs_main(["dashboard", str(tmp_path / "run")]) == 0
+    assert "space_amp" in capsys.readouterr().out
+
+
+def test_cli_check_flags_broken_tiling(tmp_path, capsys):
+    d = tmp_path / "run"
+    d.mkdir()
+    (d / "metrics.json").write_text("{}")
+    (d / "events.json").write_text(json.dumps({
+        "cap": 100, "dropped": 0,
+        "shard_lanes": {"0": {"fg": 10.0, "bg": 0.0, "gc": 0.0}},
+        "shard_meta": {},
+        "events": [{"name": "write", "ph": "X", "lane": "fg",
+                    "shard": "0", "ts": 0.0, "dur": 4.0}]}))
+    assert obs_main(["check", str(d)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+# ===================================================== recovery timeline
+_INAPPLICABLE = {"rocksdb": {"gc_pre_chain", "gc_post_chain"},
+                 "blobdb": {"gc_pre_chain", "gc_post_chain"}}
+
+
+@pytest.mark.parametrize("engine,point", [
+    ("scavenger", "after_wal"), ("scavenger", "mid_flush"),
+    ("scavenger", "gc_pre_chain"), ("titan", "gc_post_chain"),
+    ("rocksdb", "mid_compaction"), ("scavenger_adaptive", "gc_post_chain"),
+])
+def test_recovery_emits_replay_timeline(engine, point, tmp_path):
+    """Crash-recovering with an observer attached emits the §11 recovery
+    timeline and recovers the exact same state as recovering without."""
+    cfg = EngineConfig.scaled(engine, 8 << 20, est_keys=N_KEYS)
+    store = Store(cfg, durability_dir=tmp_path)
+    rng = np.random.default_rng(11)
+    try:
+        for i in range(16):
+            if i == 6:
+                store.checkpoint()
+            if i == 9:
+                store.arm_crash(point, hits=2)
+            keys = rng.integers(0, N_KEYS, 160).astype(np.uint64)
+            store.write(WriteBatch().puts(
+                keys, VSIZES[rng.integers(0, len(VSIZES), 160)]))
+    except CrashPoint:
+        pass
+
+    obs = Observer()
+    recovered = Store.open(tmp_path, observer=obs)
+    names = [ev["name"] for ev in obs.tracer.events if ev["ph"] == "i"]
+    assert names[0] == "recovery_begin"
+    assert names[-1] == "recovery_end"
+    assert "checkpoint_restored" in names
+    assert "replay_segment" in names
+    assert names.index("checkpoint_restored") < names.index("replay_segment")
+    # replayed write batches produced real spans on the recovered store
+    assert any(ev["name"] == "write" and ev["ph"] == "X"
+               for ev in obs.tracer.events)
+    assert obs.metrics.merged("replay_records").count >= 1
+
+    plain = Store.open(tmp_path)
+    assert recovered.stats() == plain.stats()
+
+
+def test_fleet_recovery_attaches_observer(tmp_path):
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS)
+    fleet = ShardedStore(cfg, n_shards=2, shard_policy="range",
+                         key_space=N_KEYS, durability_dir=tmp_path)
+    rng = np.random.default_rng(5)
+    for i in range(8):
+        if i == 4:
+            fleet.checkpoint()
+        keys = rng.integers(0, N_KEYS, 160).astype(np.uint64)
+        fleet.write(WriteBatch().puts(
+            keys, VSIZES[rng.integers(0, len(VSIZES), 160)]))
+    fleet.close()
+
+    obs = Observer()
+    recovered = ShardedStore.open(tmp_path, observer=obs)
+    assert all(s.obs is obs for s in recovered.shards)
+    assert any(ev["name"] == "write" for ev in obs.tracer.events)
+    names = [ev["name"] for ev in obs.tracer.events if ev["ph"] == "i"]
+    assert names[0] == "recovery_begin"
+    assert names[-1] == "recovery_end"
+    # one checkpoint_restored per shard, before the journal replay
+    assert names.count("checkpoint_restored") == 2
+    assert "replay_segment" in names
+    assert names.index("checkpoint_restored") < names.index("replay_segment")
+    plain = ShardedStore.open(tmp_path)
+    assert recovered.stats() == plain.stats()
+
+
+# ==================================================== config persistence
+def test_observer_never_persisted(tmp_path):
+    """state_dict strips the observer; a recovered store defaults back to
+    the null observer."""
+    obs = Observer()
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs)
+    assert "observer" not in cfg.state_dict()
+    store = Store(cfg, durability_dir=tmp_path)
+    store.put(1, 100)
+    store.checkpoint()
+    store.close()
+    recovered = Store.open(tmp_path)
+    assert recovered.cfg.observer is None
+    assert recovered.obs.enabled is False
+
+
+def test_serving_admission_metrics():
+    """ServeEngine admission records simulated fg latency + page counts
+    through the metadata store's observer."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.serve import Request, ServeEngine
+
+    obs = Observer()
+    meta = Store(EngineConfig.scaled("scavenger_adaptive", 4 << 20,
+                                     observer=obs))
+    cfg = get_config("smollm_360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = ServeEngine(model, params, batch_slots=2, cache_len=64,
+                      meta_store=meta)
+    reqs = [Request(rid=i, prompt=[1, 2, 3], max_new=2) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=60)
+    adm = obs.metrics.merged("admission_us")
+    assert adm.count >= 1
+    assert adm.quantile(0.99) >= adm.quantile(0.5) >= 0.0
+    assert obs.metrics.merged("admission_pages").count == adm.count
