@@ -20,7 +20,8 @@ analyze:
 bench-smoke:
 	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run \
 		--trace=trace_out batch_api read_path \
-		sharding adaptive_gc recovery fig02_tradeoff
+		sharding adaptive_gc recovery fig02_tradeoff \
+		kernels_bench
 	$(PY) -m repro.obs check trace_out
 
 # Perfetto-viewable observability dump from the fig02 workload

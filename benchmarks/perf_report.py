@@ -22,7 +22,8 @@ OBS_TRAJECTORY = "BENCH_obs.json"
 # inspectable via `python -m repro.obs summarize` on a --trace dump)
 OBS_HISTS = ("write_us", "multi_get_us", "stall_us", "flush_us",
              "compact_us", "gc_us", "gc_rewrite_bytes",
-             "gc_reclaimed_bytes")
+             "gc_reclaimed_bytes", "kernel_lookup_probe_us",
+             "kernel_run_coalesce_us", "kernel_segment_reduce_us")
 OBS_ENGINES = ("rocksdb", "scavenger", "scavenger_adaptive")
 
 

@@ -23,6 +23,14 @@ Exempt by construction (not knobs):
 
 Escape hatch: ``# scavlint: allow-const <why>`` for structural literals
 that are genuinely not tunable (sentinels, format widths).
+
+The kernels module (``src/repro/kernels/``) gets the inverse rule: its
+code is full of structural literals (lane widths, shift amounts), but its
+*tuning* constants — tile sizes, chunk extents, pad sentinels — must be
+shared, or the per-package copies drift and the padding contracts between
+ops silently diverge.  There the pass flags module-level ``ALL_CAPS``
+numeric definitions anywhere outside ``kernels/common.py``: import the
+constant from ``..common`` instead of redefining it.
 """
 
 from __future__ import annotations
@@ -78,10 +86,15 @@ class ConfigDisciplinePass(Pass):
     allow_token = "allow-const"
 
     def scope(self, rel: str) -> bool:
+        if rel.startswith("src/repro/kernels/"):
+            return rel != "src/repro/kernels/common.py"
         return (rel.startswith("src/repro/core/")
                 and rel not in _EXCLUDED)
 
     def check(self, sf):
+        if sf.rel.startswith("src/repro/kernels/"):
+            yield from self._check_kernels(sf)
+            return
         exempt = _exempt_ids(sf.tree)
         for node in ast.walk(sf.tree):
             if not isinstance(node, ast.Constant) or id(node) in exempt:
@@ -100,3 +113,30 @@ class ConfigDisciplinePass(Pass):
                      "ablations/the config MANIFEST edit see it), hoist to "
                      "an ALL_CAPS constant, or annotate "
                      "'# scavlint: allow-const <why>'")
+
+    def _check_kernels(self, sf):
+        """Kernel packages must not redefine tile/chunk/sentinel constants:
+        module-level ALL_CAPS numerics belong in ``kernels/common.py``."""
+        for node in sf.tree.body:
+            if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            if not targets or node.value is None:
+                continue
+            if not all(isinstance(t, ast.Name) and t.id.isupper()
+                       for t in targets):
+                continue
+            if any(isinstance(n, ast.Constant)
+                   and isinstance(n.value, (int, float))
+                   and not isinstance(n.value, bool)
+                   for n in ast.walk(node.value)):
+                names = ", ".join(t.id for t in targets)
+                yield self.finding(
+                    sf, node,
+                    f"kernel constant {names} defined outside common.py",
+                    hint="tile sizes, chunk extents and pad sentinels are "
+                         "shared contracts between kernel packages: define "
+                         "in repro/kernels/common.py and import from "
+                         "..common (or annotate "
+                         "'# scavlint: allow-const <why>')")

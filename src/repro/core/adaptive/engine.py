@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from .. import accel
 from ..engines.paper import ScavengerEngine
 from ..engines.registry import register_engine
 from .temperature import TemperatureMap
@@ -57,10 +58,11 @@ class AdaptiveScavengerEngine(ScavengerEngine):
     def observe_batch(self, store, kind: str, keys, vsizes=None) -> None:
         if self.tracker is None:
             return
-        if kind == "write":
-            self.tracker.observe_writes(keys)
-        else:
-            self.tracker.observe_reads(keys)
+        with accel.op_timer(store, "segment_reduce"):
+            if kind == "write":
+                self.tracker.observe_writes(keys)
+            else:
+                self.tracker.observe_reads(keys)
 
     # ---------------------------------------------------------- GC scoring
     def gc_candidate_score(self, store, t) -> float:

@@ -29,10 +29,10 @@ _MIN_MASS = 1e-9        # below this a group counts as unobserved
 
 class LifetimeEstimator:
     __slots__ = ("n_groups", "half_life", "residual_floor", "last_write",
-                 "hist", "_centers")
+                 "hist", "_centers", "policy")
 
     def __init__(self, n_groups: int, half_life: float | None = None,
-                 residual_floor: float = 0.1):
+                 residual_floor: float = 0.1, policy=None):
         if n_groups < 1:
             raise ValueError("n_groups must be >= 1")
         self.n_groups = int(n_groups)
@@ -43,6 +43,7 @@ class LifetimeEstimator:
         # bucket b holds intervals in [2^b, 2^(b+1)); center = 1.5 * 2^b
         self._centers = BUCKET_CENTER * 2.0 ** np.arange(N_BUCKETS,
                                                          dtype=np.float64)
+        self.policy = policy    # KernelPolicy (core/accel.py) or None
 
     # ------------------------------------------------------------- observe
     def observe(self, groups: np.ndarray, now: float) -> None:
@@ -59,7 +60,17 @@ class LifetimeEstimator:
             if self.half_life is not None:
                 # lazy per-group decay: scale by time since last observation
                 self.hist[sel] *= (0.5 ** (iv / self.half_life))[:, None]
-            self.hist[sel, b] += 1.0
+            pol = self.policy
+            if pol is not None and pol.ready(len(sel)):
+                # one-hot bucket rows via segment_sum; adding the zero
+                # columns is exact (x + 0.0 == x for the non-negative hist)
+                from repro import kernels
+                flat = np.arange(len(sel)) * N_BUCKETS + b
+                seg = kernels.segment_sum(flat, len(sel) * N_BUCKETS,
+                                          mode=pol.mode)
+                self.hist[sel] += seg.reshape(-1, N_BUCKETS)
+            else:
+                self.hist[sel, b] += 1.0
         self.last_write[ug] = now
 
     # ------------------------------------------------------------- queries

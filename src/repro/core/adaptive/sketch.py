@@ -12,8 +12,14 @@ batches in O(depth * width) memory.  Two properties matter to callers:
     so a key that stops being written cools off on a half-life schedule —
     this is what makes a *shifting* hotspot reclassify instead of sticking.
 
-Updates are vectorized (``np.add.at`` per row, ``depth`` is a small
+Updates are vectorized (one ``np.bincount`` per row, ``depth`` is a small
 constant): a whole key column crosses in one call, zero per-key loops.
+Eligible batches route the row updates through the ``segment_sum`` kernel
+and the count-min gather through ``gather_min64`` (DESIGN.md §12): both
+are bit-identical to the host path — unit-count adds accumulate as one
+integer-valued float add per slot either way, and the estimate's min runs
+as a lexicographic (hi, lo) u32 bit-pattern compare, exact for the
+sketch's non-negative float64 counters.
 """
 
 from __future__ import annotations
@@ -35,10 +41,12 @@ def normalize_half_life(half_life: float | None) -> float | None:
 
 
 class DecaySketch:
-    __slots__ = ("width", "depth", "half_life", "counts", "clock", "_seeds")
+    __slots__ = ("width", "depth", "half_life", "counts", "clock", "_seeds",
+                 "policy")
 
     def __init__(self, width: int, depth: int = 2,
-                 half_life: float | None = None, seed: int = 0):
+                 half_life: float | None = None, seed: int = 0,
+                 policy=None):
         if width < 1 or depth < 1:
             raise ValueError("sketch width and depth must be >= 1")
         self.width = int(width)
@@ -48,6 +56,7 @@ class DecaySketch:
         self.clock = 0.0
         self._seeds = splitmix64(
             np.uint64(seed) + np.arange(1, self.depth + 1, dtype=np.uint64))
+        self.policy = policy    # KernelPolicy (core/accel.py) or None
 
     # ---------------------------------------------------------------- decay
     def decay_to(self, clock: float) -> None:
@@ -67,14 +76,30 @@ class DecaySketch:
                 % np.uint64(self.width)).astype(np.int64)
 
     def add(self, keys: np.ndarray, weights=None) -> None:
-        """Add one event (or ``weights``) per key, vectorized."""
+        """Add one event (or ``weights``) per key, vectorized.
+
+        Unit-count adds accumulate occurrence counts first and add each
+        slot's total as a single integer-valued float — the exact shape of
+        the kernel's ``counts += segment_sum`` update, so the host and
+        kernel paths stay bit-identical."""
         if len(keys) == 0:
             return
-        w = (np.ones(len(keys), np.float64) if weights is None
-             else np.asarray(weights, np.float64))
         idx = self._rows(keys)
-        for r in range(self.depth):
-            np.add.at(self.counts[r], idx[r], w)
+        if weights is not None:
+            w = np.asarray(weights, np.float64)
+            for r in range(self.depth):
+                np.add.at(self.counts[r], idx[r], w)
+            return
+        pol = self.policy
+        if pol is not None and pol.ready(len(keys)):
+            from repro import kernels
+            flat = (idx + np.arange(self.depth)[:, None] * self.width).ravel()
+            seg = kernels.segment_sum(flat, self.depth * self.width,
+                                      mode=pol.mode)
+            self.counts += seg.reshape(self.depth, self.width)
+        else:
+            for r in range(self.depth):
+                self.counts[r] += np.bincount(idx[r], minlength=self.width)
 
     # -------------------------------------------------------------- queries
     def estimate(self, keys: np.ndarray) -> np.ndarray:
@@ -82,6 +107,16 @@ class DecaySketch:
         if len(keys) == 0:
             return np.zeros(0, np.float64)
         idx = self._rows(keys)
+        pol = self.policy
+        if pol is not None and pol.ready(len(keys)):
+            from repro import kernels
+            # (depth, width) f64 -> little-endian (lo, hi) u32 planes;
+            # lexicographic pair-min == numeric min for non-negative doubles
+            v = self.counts.view(np.uint32).reshape(self.depth, self.width, 2)
+            oh, ol = kernels.gather_min64(v[..., 1], v[..., 0],
+                                          idx.T, mode=pol.mode)
+            return ((oh.astype(np.uint64) << np.uint64(32))
+                    | ol.astype(np.uint64)).view(np.float64)
         est = self.counts[0][idx[0]]
         for r in range(1, self.depth):
             est = np.minimum(est, self.counts[r][idx[r]])

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from .. import accel
 from ..engine.keys import splitmix64
 from .lifetime import LifetimeEstimator
 from .sketch import DecaySketch
@@ -37,21 +38,25 @@ class AccessTracker:
 
     def __init__(self, n_groups: int, sketch_width: int, sketch_depth: int,
                  half_life_ops: float | None,
-                 residual_floor: float = 0.1):
+                 residual_floor: float = 0.1, policy=None):
         self.n_groups = int(n_groups)
         self.writes = DecaySketch(sketch_width, sketch_depth,
-                                  half_life_ops, seed=_WRITES_SEED)
+                                  half_life_ops, seed=_WRITES_SEED,
+                                  policy=policy)
         self.reads = DecaySketch(sketch_width, sketch_depth,
-                                 half_life_ops, seed=_READS_SEED)
+                                 half_life_ops, seed=_READS_SEED,
+                                 policy=policy)
         self.lifetime = LifetimeEstimator(n_groups, half_life_ops,
-                                          residual_floor=residual_floor)
+                                          residual_floor=residual_floor,
+                                          policy=policy)
         self.ops = 0.0
 
     @classmethod
     def from_config(cls, cfg) -> "AccessTracker":
         return cls(cfg.adaptive_groups, cfg.adaptive_sketch_width,
                    cfg.adaptive_sketch_depth, cfg.adaptive_half_life_ops,
-                   residual_floor=cfg.adaptive_residual_floor)
+                   residual_floor=cfg.adaptive_residual_floor,
+                   policy=accel.policy_of(cfg))
 
     # ------------------------------------------------------------- observe
     def group_of(self, keys: np.ndarray) -> np.ndarray:

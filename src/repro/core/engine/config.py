@@ -109,6 +109,15 @@ class EngineConfig:
     temp_cold_mult: float = 0.5             # cold: rate <= mult * mean rate
     adaptive_residual_floor: float = 0.1    # min residual lifetime, frac of mean
 
+    # ---- kernel acceleration (repro.kernels via core/accel.py, §12) ----
+    # Byte-identical routing of the batched hot paths through jitted
+    # kernels; ``coalesce_window`` also bounds host-planned fetch runs
+    # (None -> adjacency only), so it is a semantic knob, not a kernel one.
+    use_kernels: bool = True
+    kernel_interpret: bool | None = None    # None -> auto (resolve_mode)
+    kernel_min_batch: int = 128             # below this, stay on the host
+    coalesce_window: int | None = None      # max records per coalesced run
+
     # ---- observability (repro.obs, DESIGN.md §11) ----
     # Hook object receiving spans/metrics/health ticks from the core; None
     # resolves to the no-op NullObserver (observability-off runs are
@@ -142,6 +151,7 @@ class EngineConfig:
                 f"engine {self.engine!r} does not support "
                 f"adaptive_enabled=True (use engine='scavenger_adaptive')")
         self._validate_adaptive()
+        self._validate_kernels()
 
     def _validate_adaptive(self):
         """Bounds for the adaptive-tracker knobs (always checked: the
@@ -166,6 +176,15 @@ class EngineConfig:
             raise ValueError(
                 "need 0 <= temp_cold_mult < temp_hot_mult, got "
                 f"{self.temp_cold_mult} / {self.temp_hot_mult}")
+
+    def _validate_kernels(self):
+        """Bounds for the kernel-routing knobs (core/accel.py, §12)."""
+        if self.kernel_min_batch < 1:
+            raise ValueError("kernel_min_batch must be >= 1, got "
+                             f"{self.kernel_min_batch}")
+        if self.coalesce_window is not None and self.coalesce_window < 1:
+            raise ValueError("coalesce_window must be None or >= 1, got "
+                             f"{self.coalesce_window}")
 
     # -------------------------------------------------------- serialization
     def state_dict(self) -> dict:

@@ -44,6 +44,17 @@ def hash_family(keys: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
         return h1[None, :] + ks * h2[None, :]
 
 
+def bloom_params(n_keys: int, bits_per_key: int) -> tuple[int, int]:
+    """Canonical bloom sizing shared by the engine filter and the Pallas
+    probe kernels (``repro.kernels.bloom``): ``(k, nbits)`` with
+    ``k = round(ln2 * bits/key)`` probes and ``nbits`` rounded up to whole
+    u64 words.  One derivation — the engine and the kernels can't drift."""
+    k = max(1, int(round(bits_per_key * _LN2)))
+    nbits = int(max(_WORD_BITS, max(1, n_keys) * bits_per_key))
+    nwords = (nbits + _WORD_BITS - 1) // _WORD_BITS
+    return k, nwords * _WORD_BITS
+
+
 class BloomFilter:
     """Standard k-hash bloom filter over u64 keys (10 bits/key default).
 
@@ -56,15 +67,11 @@ class BloomFilter:
     @staticmethod
     def k_for(bits_per_key: int) -> int:
         """Number of hash probes for a given bits/key (ln2 * bits/key)."""
-        return max(1, int(round(bits_per_key * _LN2)))
+        return bloom_params(1, bits_per_key)[0]
 
     def __init__(self, keys: np.ndarray, bits_per_key: int = 10):
-        n = max(1, len(keys))
-        self.nbits = int(max(_WORD_BITS, n * bits_per_key))
-        # round up to u64 words
-        nwords = (self.nbits + _WORD_BITS - 1) // _WORD_BITS
-        self.nbits = nwords * _WORD_BITS
-        self.k = self.k_for(bits_per_key)
+        self.k, self.nbits = bloom_params(len(keys), bits_per_key)
+        nwords = self.nbits // _WORD_BITS
         self.bits = np.zeros(nwords, dtype=np.uint64)
         self.nbytes = nwords * _WORD_BYTES
         if len(keys):

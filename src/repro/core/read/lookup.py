@@ -5,12 +5,18 @@ DESIGN.md §7).
 whole key column: batched columnar memtable probes (``Memtable.get_batch``),
 one bloom/``find`` pass per touched SSTable, block-cache I/O accounting per
 unique (stream, block) — no per-key Python anywhere on the path.
+
+Eligible batches route through the fused ``lookup_probe`` kernel
+(``core/accel.py``, DESIGN.md §12): the bloom bit test, the sorted-run
+membership/rank, and the per-level file assignment run as one jitted call
+per probed structure, byte-identical to the host path below.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from .. import accel
 from ..engine.cache import BlockCache
 from ..engine.keys import BloomFilter, hash_family
 from ..engine.tables import ETYPE_NONE, ETYPE_REF, SSTable
@@ -73,7 +79,9 @@ def lookup_entries(store, keys: np.ndarray, cat: str) -> dict:
         if not unresolved.any():
             break
         rows = np.nonzero(unresolved)[0]
-        found, _, ety, vids, vsz, vf = mt.get_batch(keys[rows])
+        probe = accel.memtable_probe(store, mt, keys[rows])
+        found, _, ety, vids, vsz, vf = (probe if probe is not None
+                                        else mt.get_batch(keys[rows]))
         if not found.any():
             continue
         hit = rows[found]
@@ -89,13 +97,15 @@ def lookup_entries(store, keys: np.ndarray, cat: str) -> dict:
     kraw = hash_family(keys, BloomFilter.k_for(store.cfg.filter_bits_per_key))
 
     def probe_file(t: SSTable, rows: np.ndarray):
-        may = t.bloom.may_contain(keys[rows], raw=kraw[:, rows])
+        fused = accel.table_probe(store, t, keys[rows], kraw[:, rows])
+        may = (t.bloom.may_contain(keys[rows], raw=kraw[:, rows])
+               if fused is None else fused[0])
         if not may.any():
             return
         rows = rows[may]
         read_block(store, t, "i", 0, cat, BlockCache.PRI_HIGH,
                    t.index_block_bytes())
-        pos = t.find(keys[rows])
+        pos = t.find(keys[rows]) if fused is None else fused[1][may]
         hit = pos >= 0
         if hit.any():
             hrows, hpos = rows[hit], pos[hit]
@@ -118,7 +128,9 @@ def lookup_entries(store, keys: np.ndarray, cat: str) -> dict:
         if not files:
             continue
         rows = np.nonzero(unresolved)[0]
-        fidx = store.version.assign_files(lvl, keys[rows])
+        fidx = accel.assign_files(store, lvl, keys[rows])
+        if fidx is None:
+            fidx = store.version.assign_files(lvl, keys[rows])
         for fi in np.unique(fidx[fidx >= 0]):
             probe_file(files[fi], rows[fidx == fi])
     return out

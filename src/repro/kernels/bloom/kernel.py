@@ -14,10 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import MIX1, MIX2, mix32
-
-QUERY_TILE = 256
-WORD_CHUNK = 512
+from ..common import MIX1, MIX2, QUERY_TILE, WORD_CHUNK, mix32
 
 
 def _kernel(q_ref, bits_ref, out_ref, *, k: int, nbits: int):

@@ -4,18 +4,21 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..common import interpret_default, pad_to, round_up
-from .kernel import QUERY_TILE, WORD_CHUNK, bloom_probe_pallas
+from repro.core.engine.keys import bloom_params
+
+from ..common import (QUERY_TILE, WORD_CHUNK, interpret_default, pad_to,
+                      round_up)
+from .kernel import bloom_probe_pallas
 from .ref import bloom_build_ref
 
 
 def bloom_build(keys, bits_per_key: int = 10):
-    """Build filter words for a key set; k = 0.69 * bits/key as the engine.
-    Returns (words u32 (W,), k, nbits) with W padded to the kernel chunk."""
+    """Build filter words for a key set; (k, nbits) come from the engine's
+    canonical ``bloom_params`` derivation, with nbits further rounded up to
+    the kernel's u32 word chunk.  Returns (words u32 (W,), k, nbits)."""
     keys = jnp.asarray(keys).astype(jnp.uint32)
-    n = max(1, keys.shape[0])
-    nbits = round_up(max(64, n * bits_per_key), 32 * WORD_CHUNK)
-    k = max(1, int(round(bits_per_key * 0.69)))
+    k, nbits = bloom_params(keys.shape[0], bits_per_key)
+    nbits = round_up(nbits, 32 * WORD_CHUNK)
     return bloom_build_ref(keys, k, nbits), k, nbits
 
 

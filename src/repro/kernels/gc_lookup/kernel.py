@@ -19,8 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-QUERY_TILE = 256
-CHUNK = 512
+from ..common import QUERY_TILE, TABLE_CHUNK as CHUNK
 
 
 def _kernel(q_ref, sk_ref, sv_ref, sf_ref, found_ref, vid_ref, vfile_ref):

@@ -5,10 +5,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import interpret_default, pad_to, round_up
+from ..common import U32_MAX, interpret_default, pad_to, round_up
 from .kernel import CHUNK, QUERY_TILE, gc_lookup_pallas
-
-_SENTINEL = np.uint32(0xFFFFFFFF)
 
 
 def gc_lookup(queries, s_keys, s_vids, s_vfiles, *, interpret=None):
@@ -31,8 +29,8 @@ def gc_lookup(queries, s_keys, s_vids, s_vfiles, *, interpret=None):
         return jnp.zeros((q,), bool), z, z
     qp = round_up(q, QUERY_TILE)
     np_ = round_up(n, CHUNK)
-    queries_p = pad_to(queries, qp, _SENTINEL).reshape(qp, 1)
-    sk = pad_to(s_keys, np_, _SENTINEL - 1)
+    queries_p = pad_to(queries, qp, U32_MAX).reshape(qp, 1)
+    sk = pad_to(s_keys, np_, U32_MAX - 1)
     sv = pad_to(jnp.asarray(s_vids).astype(jnp.uint32), np_, 0)
     sf = pad_to(jnp.asarray(s_vfiles).astype(jnp.uint32), np_, 0)
     found, vid, vfile = gc_lookup_pallas(queries_p, sk, sv, sf,

@@ -1,0 +1,5 @@
+from .ops import interval_rank, lookup_probe, rank_probe
+from .ref import count_le_ref, lookup_probe_ref, rank_probe_ref
+
+__all__ = ["lookup_probe", "rank_probe", "interval_rank",
+           "lookup_probe_ref", "rank_probe_ref", "count_le_ref"]

@@ -1,0 +1,172 @@
+"""Fused lookup-probe kernel: bloom bit test + membership/rank in one pass
+(the read layer's per-table hot loop, DESIGN.md §12).
+
+TPU adaptation: the sorted key run streams through VMEM in chunks and each
+query tile accumulates ``found`` (equality any) and ``rank`` (count of
+strictly-less — exactly ``searchsorted`` left on a sorted run) by
+compare-and-reduce; the bloom word fetch is one-hot multiply-reduce over
+the u32-viewed filter words, with the k bit indices precomputed on the
+host from the engine's hoisted u64 ``hash_family`` column (u64 modulo is
+host-side work — kernels stay in u32 lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import QUERY_TILE, TABLE_CHUNK, WORD_CHUNK
+
+
+def _membership(q, tk_ref):
+    """(found, rank) for a query tile vs the resident sorted run."""
+    n = tk_ref.shape[0]
+
+    def body(i, carry):
+        found, rank = carry
+        ck = tk_ref[pl.ds(i * TABLE_CHUNK, TABLE_CHUNK)]      # (C,)
+        eq = q == ck[None, :]                                 # (QT, C)
+        lt = ck[None, :] < q
+        found = found | eq.any(axis=1, keepdims=True)
+        rank = rank + lt.astype(jnp.int32).sum(axis=1, keepdims=True)
+        return found, rank
+
+    init = (jnp.zeros(q.shape, jnp.bool_), jnp.zeros(q.shape, jnp.int32))
+    return jax.lax.fori_loop(0, n // TABLE_CHUNK, body, init)
+
+
+def _bloom_test(q_shape, bit_ref, w_ref, k):
+    """AND of k one-hot-fetched word bit tests (k is static: python loop)."""
+    w = w_ref.shape[0]
+    may = jnp.ones(q_shape, jnp.bool_)
+    for j in range(k):
+        idx = bit_ref[:, j:j + 1].astype(jnp.uint32)          # (QT, 1)
+        word_i = idx >> jnp.uint32(5)
+        bit_i = idx & jnp.uint32(31)
+
+        def fetch(c, acc, word_i=word_i):
+            chunk = w_ref[pl.ds(c * WORD_CHUNK, WORD_CHUNK)]
+            base = (c * WORD_CHUNK
+                    + jax.lax.broadcasted_iota(jnp.uint32, (1, WORD_CHUNK),
+                                               1))
+            sel = (word_i == base).astype(jnp.uint32)          # (QT, WC)
+            return acc + (sel * chunk[None, :]).sum(axis=1, keepdims=True)
+
+        word = jax.lax.fori_loop(0, w // WORD_CHUNK, fetch,
+                                 jnp.zeros(q_shape, jnp.uint32))
+        may = may & (((word >> bit_i) & jnp.uint32(1)) == jnp.uint32(1))
+    return may
+
+
+def _probe_kernel(q_ref, tk_ref, bit_ref, w_ref, may_ref, found_ref,
+                  rank_ref, *, k: int):
+    q = q_ref[...].astype(jnp.uint32)
+    found, rank = _membership(q, tk_ref)
+    may_ref[...] = _bloom_test(q.shape, bit_ref, w_ref, k)
+    found_ref[...] = found
+    rank_ref[...] = rank
+
+
+def _rank_kernel(q_ref, tk_ref, found_ref, rank_ref):
+    q = q_ref[...].astype(jnp.uint32)
+    found, rank = _membership(q, tk_ref)
+    found_ref[...] = found
+    rank_ref[...] = rank
+
+
+def _count_le_kernel(q_ref, mins_ref, cnt_ref):
+    q = q_ref[...].astype(jnp.uint32)
+    n = mins_ref.shape[0]
+
+    def body(i, cnt):
+        ck = mins_ref[pl.ds(i * TABLE_CHUNK, TABLE_CHUNK)]
+        le = ck[None, :] <= q
+        return cnt + le.astype(jnp.int32).sum(axis=1, keepdims=True)
+
+    cnt_ref[...] = jax.lax.fori_loop(0, n // TABLE_CHUNK, body,
+                                     jnp.zeros(q.shape, jnp.int32))
+
+
+def _qtile(i):
+    return (i, 0)
+
+
+def _full(i):
+    return (0,)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def lookup_probe_pallas(queries, table_keys, bit_idx, words, *, k: int,
+                        interpret=True):
+    """queries (Q,1) u32; table_keys (N,) sorted u32; bit_idx (Q,k) u32;
+    words (W,) u32.  Q % QUERY_TILE == N % TABLE_CHUNK == W % WORD_CHUNK
+    == 0.  -> (may, found (Q,1) bool, rank (Q,1) i32)."""
+    q, n, w = queries.shape[0], table_keys.shape[0], words.shape[0]
+    assert (q % QUERY_TILE == 0 and n % TABLE_CHUNK == 0
+            and w % WORD_CHUNK == 0)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, k=k),
+        grid=(q // QUERY_TILE,),
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+            pl.BlockSpec((n,), _full),
+            pl.BlockSpec((QUERY_TILE, k), _qtile),
+            pl.BlockSpec((w,), _full),
+        ],
+        out_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((q, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, table_keys, bit_idx, words)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rank_probe_pallas(queries, table_keys, *, interpret=True):
+    """Membership/rank only (memtable probes carry no bloom filter)."""
+    q, n = queries.shape[0], table_keys.shape[0]
+    assert q % QUERY_TILE == 0 and n % TABLE_CHUNK == 0
+    return pl.pallas_call(
+        _rank_kernel,
+        grid=(q // QUERY_TILE,),
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+            pl.BlockSpec((n,), _full),
+        ],
+        out_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, table_keys)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def count_le_pallas(queries, mins, *, interpret=True):
+    """Per-query count of run entries <= query (level file assignment)."""
+    q, n = queries.shape[0], mins.shape[0]
+    assert q % QUERY_TILE == 0 and n % TABLE_CHUNK == 0
+    return pl.pallas_call(
+        _count_le_kernel,
+        grid=(q // QUERY_TILE,),
+        in_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), _qtile),
+            pl.BlockSpec((n,), _full),
+        ],
+        out_specs=pl.BlockSpec((QUERY_TILE, 1), _qtile),
+        out_shape=jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        interpret=interpret,
+    )(queries, mins)

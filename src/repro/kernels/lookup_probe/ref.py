@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the fused lookup-probe kernel.
+
+Integer-exact by construction: ``searchsorted`` (left) on a sorted run
+equals the kernel's count-of-strictly-less rank, and the bloom bit test is
+the same shift/mask arithmetic the engine's ``BloomFilter`` runs on u64
+words viewed as u32 lanes.  The engine's XLA dispatch mode jit-compiles
+these oracles directly (``repro.kernels.common.resolve_mode``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rank_probe_ref(queries, table_keys):
+    """queries (Q,) u32 vs sorted run (N,) u32.
+    -> (found (Q,) bool, rank (Q,) i32) with rank = #{table < query}."""
+    n = table_keys.shape[0]
+    rank = jnp.searchsorted(table_keys, queries).astype(jnp.int32)
+    if n == 0:
+        return jnp.zeros(queries.shape, bool), rank
+    safe = jnp.clip(rank, 0, n - 1)
+    found = (table_keys[safe] == queries) & (rank < n)
+    return found, rank
+
+
+def lookup_probe_ref(queries, table_keys, bit_idx, words):
+    """Fused bloom probe + membership/rank.
+
+    bit_idx (Q, k) u32 pre-modulo'd filter bit indices; words (W,) u32
+    filter words (the engine's u64 bit array little-endian-viewed as u32).
+    -> (may (Q,) bool, found (Q,) bool, rank (Q,) i32)."""
+    w = words[bit_idx >> jnp.uint32(5)]                       # (Q, k)
+    bit = ((w >> (bit_idx & jnp.uint32(31))) & jnp.uint32(1))
+    may = (bit == jnp.uint32(1)).all(axis=1)
+    found, rank = rank_probe_ref(queries, table_keys)
+    return may, found, rank
+
+
+def count_le_ref(queries, mins):
+    """#{mins <= query} per query (searchsorted side='right') — the level
+    file-assignment rank.  -> (Q,) i32."""
+    return jnp.searchsorted(mins, queries, side="right").astype(jnp.int32)

@@ -5,10 +5,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import interpret_default, next_pow2, pad_to
+from ..common import U32_MAX, interpret_default, next_pow2, pad_to
 from .kernel import merge_dedup_pallas
-
-_SENTINEL = np.uint32(0xFFFFFFFF)
 
 
 def merge_dedup(ak, aseq, avid, bk, bseq, bvid, *, interpret=None):
@@ -21,10 +19,10 @@ def merge_dedup(ak, aseq, avid, bk, bseq, bvid, *, interpret=None):
     bk = jnp.asarray(bk).astype(jnp.uint32)
     na, nb = ak.shape[0], bk.shape[0]
     half = next_pow2(max(na, nb, 1))
-    a = [pad_to(ak, half, _SENTINEL),
+    a = [pad_to(ak, half, U32_MAX),
          pad_to(jnp.asarray(aseq).astype(jnp.uint32), half, 0),
          pad_to(jnp.asarray(avid).astype(jnp.uint32), half, 0)]
-    b = [pad_to(bk, half, _SENTINEL),
+    b = [pad_to(bk, half, U32_MAX),
          pad_to(jnp.asarray(bseq).astype(jnp.uint32), half, 0),
          pad_to(jnp.asarray(bvid).astype(jnp.uint32), half, 0)]
     keys, seqs, vids, keep = merge_dedup_pallas(*a, *b, interpret=interpret)

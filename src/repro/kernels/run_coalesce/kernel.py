@@ -1,0 +1,65 @@
+"""Run-coalescing kernel: sort + dedup + adjacency-run planning for the
+value-fetch path (paper §III-B.1, DESIGN.md §12).
+
+The fetch planner turns a column of (file-rank, record-position) pairs
+into I/O runs: sort lexicographically, drop duplicate pairs, and start a
+new run at every file change or position gap > 1 — plus every ``window``
+kept records when a coalesce window caps run length (qd-style bounded
+requests).  On TPU the sort is a gather-free bitonic network over the
+pair key (``common.bitonic_sort_pairs``) and the run marks come from
+shifted compares and Hillis-Steele prefix scans — no gathers anywhere.
+
+Single-block kernel: the bitonic network needs the whole (pow2-padded)
+column resident, like ``kernels/partition``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import bitonic_sort_pairs, prefix_max, prefix_sum
+
+
+def _coalesce_kernel(r_ref, p_ref, rs_ref, ps_ref, keep_ref, start_ref, *,
+                     window: int | None):
+    r, p = bitonic_sort_pairs(r_ref[...], p_ref[...])
+    m = r.shape[0]
+    i0 = jax.lax.broadcasted_iota(jnp.int32, (m,), 0) == 0
+    prev_r = jnp.concatenate([jnp.zeros((1,), r.dtype), r[:-1]])
+    prev_p = jnp.concatenate([jnp.zeros((1,), p.dtype), p[:-1]])
+    keep = i0 | (r != prev_r) | (p != prev_p)
+    start = (i0 | (r != prev_r) | (p - prev_p > jnp.uint32(1))) & keep
+    if window is not None:
+        kept = prefix_sum(keep.astype(jnp.int32))
+        base = prefix_max(jnp.where(start, kept, 0))
+        start = start | (keep & ((kept - base) % window == 0))
+    rs_ref[...] = r
+    ps_ref[...] = p
+    keep_ref[...] = keep
+    start_ref[...] = start
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def run_coalesce_pallas(rank, pos, *, window=None, interpret=True):
+    """rank/pos (M,) u32, M a power of two (pads sort last via all-ones
+    rank sentinel).  -> (rank_s, pos_s u32, keep, run_start bool), all
+    (M,) in sorted order."""
+    m = rank.shape[0]
+    assert (m & (m - 1)) == 0
+    spec = pl.BlockSpec((m,), lambda: (0,))
+    return pl.pallas_call(
+        functools.partial(_coalesce_kernel, window=window),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.uint32),
+            jax.ShapeDtypeStruct((m,), jnp.uint32),
+            jax.ShapeDtypeStruct((m,), jnp.bool_),
+            jax.ShapeDtypeStruct((m,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(rank, pos)

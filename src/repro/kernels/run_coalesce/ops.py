@@ -1,0 +1,51 @@
+"""Dispatching wrapper for the run-coalescing op.
+
+Pads the pair column to a power of two with all-ones rank sentinels
+(sorts strictly after every real pair) and trims back after the kernel;
+real ranks must stay below the sentinel.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..common import U32_MAX, next_pow2, resolve_mode
+from .kernel import run_coalesce_pallas
+from .ref import run_coalesce_ref
+
+_xla_coalesce = jax.jit(run_coalesce_ref, static_argnames=("window",))
+
+
+def run_coalesce(rank, pos, *, window=None, mode=None):
+    """Plan coalesced I/O runs for (file-rank, record-position) pairs.
+
+    -> numpy (rank_s i64, pos_s i64, keep bool, run_start bool), all (M,)
+    sorted by (rank, pos); duplicates have keep False, and run_start marks
+    the first kept record of each adjacent run (capped at ``window`` kept
+    records per run when set)."""
+    if mode is None:
+        mode = resolve_mode(None)
+    rank = np.asarray(rank)
+    pos = np.asarray(pos)
+    m = rank.shape[0]
+    if m == 0:
+        e = np.zeros(0, np.int64)
+        return e, e.copy(), np.zeros(0, bool), np.zeros(0, bool)
+    assert int(rank.max()) < int(U32_MAX) and int(pos.max()) < int(U32_MAX)
+    if window is not None:
+        window = int(window)
+        assert window >= 1
+    mp = max(2, next_pow2(m))
+    rp = np.full(mp, U32_MAX, np.uint32)
+    rp[:m] = rank
+    pp = np.full(mp, U32_MAX, np.uint32)
+    pp[:m] = pos
+    if mode == "xla":
+        r, p, keep, start = _xla_coalesce(rp, pp, window=window)
+    else:
+        r, p, keep, start = run_coalesce_pallas(
+            rp, pp, window=window, interpret=(mode == "interpret"))
+    return (np.asarray(r)[:m].astype(np.int64),
+            np.asarray(p)[:m].astype(np.int64),
+            np.asarray(keep)[:m], np.asarray(start)[:m])

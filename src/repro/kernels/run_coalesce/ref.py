@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the run-coalescing kernel (stable two-pass argsort
+in place of the bitonic network; same dedup/run-mark arithmetic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def run_coalesce_ref(rank, pos, window=None):
+    """rank/pos (M,) u32 -> (rank_s, pos_s, keep, run_start), sorted by
+    the lexicographic (rank, pos) pair."""
+    o1 = jnp.argsort(pos, stable=True)
+    o2 = jnp.argsort(rank[o1], stable=True)
+    order = o1[o2]
+    r, p = rank[order], pos[order]
+    m = r.shape[0]
+    i0 = jnp.arange(m) == 0
+    prev_r = jnp.concatenate([jnp.zeros((1,), r.dtype), r[:-1]])
+    prev_p = jnp.concatenate([jnp.zeros((1,), p.dtype), p[:-1]])
+    keep = i0 | (r != prev_r) | (p != prev_p)
+    start = (i0 | (r != prev_r) | (p - prev_p > jnp.uint32(1))) & keep
+    if window is not None:
+        kept = jnp.cumsum(keep.astype(jnp.int32))
+        base = jax.lax.cummax(jnp.where(start, kept, 0))
+        start = start | (keep & ((kept - base) % window == 0))
+    return r, p, keep, start

@@ -1,0 +1,5 @@
+from .ops import gather_min64, segment_sum
+from .ref import gather_min64_ref, segment_sum_ref
+
+__all__ = ["segment_sum", "gather_min64",
+           "segment_sum_ref", "gather_min64_ref"]

@@ -1,0 +1,117 @@
+"""Segment-reduce kernels for the adaptive tracker (DESIGN.md §8, §12).
+
+Two gather/scatter-free primitives cover the DecaySketch / lifetime
+histogram hot path:
+
+  * ``segment_sum`` — integer occurrence counts per slot.  TPUs have no
+    vector scatter-add, so the grid walks *output* slot tiles and each
+    tile one-hot-matches the whole id column against its slot range
+    (compare + reduce, the transpose of the gather-via-matmul trick).
+    Counts are exact integers; the host applies them to the float64
+    sketch state in one vectorized add, which keeps kernel-on and
+    kernel-off arithmetic bit-identical.
+
+  * ``gather_min64`` — count-min estimate reads.  The f64 sketch rows
+    arrive as (hi, lo) u32 bit-pattern planes (non-negative IEEE doubles
+    order lexicographically by bit pattern), fetched one-hot per depth row
+    and min-reduced pairwise — bit-exact against numpy's gather + min.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import QUERY_TILE, SLOT_TILE, TABLE_CHUNK
+
+
+def _seg_kernel(ids_ref, out_ref):
+    i = pl.program_id(0)
+    n = ids_ref.shape[0]
+    base = (i * SLOT_TILE
+            + jax.lax.broadcasted_iota(jnp.int32, (SLOT_TILE, 1), 0))
+
+    def body(c, acc):
+        chunk = ids_ref[pl.ds(c * TABLE_CHUNK, TABLE_CHUNK)]   # (C,)
+        sel = base == chunk[None, :]                           # (ST, C)
+        return acc + sel.astype(jnp.int32).sum(axis=1, keepdims=True)
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, n // TABLE_CHUNK, body, jnp.zeros((SLOT_TILE, 1), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "interpret"))
+def segment_sum_pallas(ids, *, n_slots: int, interpret=True):
+    """ids (P,) i32 (-1 = masked), P % TABLE_CHUNK == 0; n_slots the
+    static output extent (S % SLOT_TILE == 0).  -> (S, 1) i32 counts."""
+    p, s = ids.shape[0], n_slots
+    assert p % TABLE_CHUNK == 0 and s % SLOT_TILE == 0
+    return pl.pallas_call(
+        _seg_kernel,
+        grid=(s // SLOT_TILE,),
+        in_specs=[pl.BlockSpec((p,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((SLOT_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, 1), jnp.int32),
+        interpret=interpret,
+    )(ids)
+
+
+def _gmin_kernel(hi_ref, lo_ref, idx_ref, ohi_ref, olo_ref, *, depth: int):
+    w = hi_ref.shape[1]
+    best_h = best_l = None
+    for d in range(depth):
+        idx = idx_ref[:, d:d + 1]                              # (QT, 1) i32
+
+        def fetch(c, carry, idx=idx, d=d):
+            ah, al = carry
+            ch = hi_ref[d, pl.ds(c * TABLE_CHUNK, TABLE_CHUNK)]
+            cl = lo_ref[d, pl.ds(c * TABLE_CHUNK, TABLE_CHUNK)]
+            base = (c * TABLE_CHUNK
+                    + jax.lax.broadcasted_iota(jnp.int32, (1, TABLE_CHUNK),
+                                               1))
+            sel = (idx == base).astype(jnp.uint32)             # (QT, C)
+            ah = ah + (sel * ch[None, :]).sum(axis=1, keepdims=True)
+            al = al + (sel * cl[None, :]).sum(axis=1, keepdims=True)
+            return ah, al
+
+        z = jnp.zeros(idx.shape, jnp.uint32)
+        h, low = jax.lax.fori_loop(0, w // TABLE_CHUNK, fetch, (z, z))
+        if best_h is None:
+            best_h, best_l = h, low
+        else:
+            lt = (h < best_h) | ((h == best_h) & (low < best_l))
+            best_h = jnp.where(lt, h, best_h)
+            best_l = jnp.where(lt, low, best_l)
+    ohi_ref[...] = best_h
+    olo_ref[...] = best_l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_min64_pallas(hi, lo, idx, *, interpret=True):
+    """hi/lo (D, W) u32 bit-pattern planes; idx (Q, D) i32 slot indices
+    per depth row.  Q % QUERY_TILE == 0, W % TABLE_CHUNK == 0.
+    -> ((Q,1), (Q,1)) u32 lexicographic min over depth rows."""
+    d, w = hi.shape
+    q = idx.shape[0]
+    assert q % QUERY_TILE == 0 and w % TABLE_CHUNK == 0
+    return pl.pallas_call(
+        functools.partial(_gmin_kernel, depth=d),
+        grid=(q // QUERY_TILE,),
+        in_specs=[
+            pl.BlockSpec((d, w), lambda i: (0, 0)),
+            pl.BlockSpec((d, w), lambda i: (0, 0)),
+            pl.BlockSpec((QUERY_TILE, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((QUERY_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((q, 1), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(hi, lo, idx)

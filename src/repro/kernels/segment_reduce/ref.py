@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the segment-reduce kernels (scatter-add / fancy
+gather — what XLA compiles well on CPU; the Pallas kernels replace them
+with one-hot compare-reduce on TPU)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_sum_ref(ids, n_slots: int):
+    """ids (P,) i32 (-1 = masked) -> (n_slots,) i32 occurrence counts."""
+    ids = ids.astype(jnp.int32)
+    valid = (ids >= 0) & (ids < n_slots)
+    safe = jnp.clip(ids, 0, max(n_slots - 1, 0))
+    return jnp.zeros(n_slots, jnp.int32).at[safe].add(
+        valid.astype(jnp.int32))
+
+
+def gather_min64_ref(hi, lo, idx):
+    """hi/lo (D, W) u32 planes, idx (Q, D) i32 -> ((Q,), (Q,)) u32
+    lexicographic min over the D fetched (hi, lo) pairs."""
+    best_h = hi[0][idx[:, 0]]
+    best_l = lo[0][idx[:, 0]]
+    for d in range(1, hi.shape[0]):
+        h = hi[d][idx[:, d]]
+        low = lo[d][idx[:, d]]
+        lt = (h < best_h) | ((h == best_h) & (low < best_l))
+        best_h = jnp.where(lt, h, best_h)
+        best_l = jnp.where(lt, low, best_l)
+    return best_h, best_l

@@ -10,10 +10,19 @@ from numpy.testing import assert_allclose, assert_array_equal
 from _hypothesis_support import given, settings, st
 
 from repro.kernels import (bloom_build, bloom_probe, bloom_probe_ref,
-                           gc_lookup, gc_lookup_ref, hot_cold_partition,
-                           hot_cold_partition_ref, merge_dedup,
-                           merge_dedup_ref, page_gather, page_gather_ref)
+                           gather_min64, gc_lookup, gc_lookup_ref,
+                           hot_cold_partition, hot_cold_partition_ref,
+                           interval_rank, lookup_probe, merge_dedup,
+                           merge_dedup_ref, page_gather, page_gather_ref,
+                           rank_probe, run_coalesce, segment_sum)
 from repro.kernels.common import bitonic_merge, bitonic_sort
+
+# kernels.lookup_probe / kernels.run_coalesce / kernels.segment_reduce ops
+# run in both modes: the jitted XLA oracle and the Pallas interpreter.
+MODES = ("xla", "interpret")
+
+# largest u32 value the dispatchers accept (pad sentinel is 0xFFFFFFFE)
+BOUNDARY = 0xFFFFFFFD
 
 
 # ------------------------------------------------------------- common nets
@@ -171,3 +180,213 @@ def test_page_gather_matches_ref(b, p, npages, psize, d, dtype):
     assert got.shape == (b, p * psize, d)
     assert_array_equal(np.asarray(got.astype(jnp.float32)),
                        np.asarray(want.astype(jnp.float32)))
+
+
+# ----------------------------------------------- lookup_probe (fused read)
+def _rank_oracle(queries, table):
+    pos = np.searchsorted(table, queries)
+    ok = pos < len(table)
+    safe = np.where(ok, pos, 0)
+    ok &= len(table) > 0 and table[safe] == queries
+    return ok, pos
+
+
+def _bloom_oracle(bit_idx, words):
+    w = words[bit_idx >> 5]
+    return (((w >> (bit_idx & 31)) & 1) == 1).all(axis=1)
+
+
+def _probe_case(rng, q, n, boundary=False):
+    """Adversarial (queries, table, bit_idx, words) quadruple."""
+    space = np.arange(1, 4 * n + 2, dtype=np.uint32)
+    table = np.sort(rng.choice(space, n, replace=False))
+    if boundary and n:
+        table[-1] = BOUNDARY
+    queries = np.concatenate([
+        rng.choice(table, q // 2 + 1) if n else np.zeros(1, np.uint32),
+        rng.integers(4 * n + 2, 8 * n + 9, q).astype(np.uint32)])[:q]
+    if boundary and q:
+        queries[0] = BOUNDARY
+    k, nbits = 7, 1 << 14
+    words = rng.integers(0, 1 << 32, nbits // 32, dtype=np.uint64)
+    words = words.astype(np.uint32)
+    bit_idx = rng.integers(0, nbits, (q, k)).astype(np.uint32)
+    return queries, table, bit_idx, words
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("q,n", [(0, 16), (1, 1), (7, 300), (256, 512),
+                                 (300, 1000)])
+def test_lookup_probe_matches_oracle(q, n, mode):
+    if mode == "interpret" and q * n > 4096:
+        pytest.skip("interpret mode: small shapes only")
+    rng = np.random.default_rng(q * 1000 + n)
+    queries, table, bit_idx, words = _probe_case(rng, q, n, boundary=True)
+    may, found, rank = lookup_probe(queries, table, bit_idx, words,
+                                    mode=mode)
+    assert_array_equal(may, _bloom_oracle(bit_idx, words))
+    wf, wr = _rank_oracle(queries, table)
+    assert_array_equal(found, wf)
+    assert_array_equal(rank[found], wr[found])
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_rank_probe_all_duplicates(mode):
+    table = np.array([5, 9, 1000], np.uint32)
+    queries = np.full(9, 9, np.uint32)          # all-duplicate batch
+    found, rank = rank_probe(queries, table, mode=mode)
+    assert found.all() and (rank == 1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, BOUNDARY), min_size=1, max_size=64,
+                unique=True),
+       st.lists(st.integers(0, BOUNDARY), min_size=0, max_size=64))
+def test_rank_probe_property(tkeys, queries):
+    table = np.sort(np.array(tkeys, np.uint32))
+    q = np.array(queries, np.uint32)
+    found, rank = rank_probe(q, table, mode="xla")
+    wf, wr = _rank_oracle(q, table)
+    assert_array_equal(found, wf)
+    assert_array_equal(rank[found], wr[found])
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_interval_rank_matches_assign_files(mode):
+    # disjoint sorted [min, max] file ranges, like an LSM level
+    mins = np.array([10, 40, 100, 1000], np.uint64)
+    maxs = np.array([30, 60, 900, BOUNDARY], np.uint64)
+    queries = np.array([0, 10, 30, 31, 40, 99, 100, 900, 901, 1000,
+                        BOUNDARY], np.uint64)
+    got = interval_rank(queries, mins, maxs, mode=mode)
+    pos = np.searchsorted(mins, queries, side="right") - 1
+    ok = pos >= 0
+    safe = np.where(ok, pos, 0)
+    ok &= queries <= maxs[safe]
+    assert_array_equal(got, np.where(ok, pos, -1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=2, max_size=40,
+                unique=True),
+       st.lists(st.integers(0, 11_000), min_size=1, max_size=50))
+def test_interval_rank_property(bounds, queries):
+    e = np.sort(np.array(bounds, np.uint64))
+    mins, maxs = e[::2][:len(e) // 2], e[1::2][:len(e) // 2]
+    q = np.array(queries, np.uint64)
+    got = interval_rank(q, mins, maxs, mode="xla")
+    for qi, gi in zip(q.tolist(), got.tolist()):
+        covers = np.nonzero((mins <= qi) & (qi <= maxs))[0]
+        assert gi == (covers[0] if len(covers) else -1)
+
+
+# -------------------------------------------- run_coalesce (fetch planning)
+def _coalesce_oracle(rank, pos, window):
+    """Per-rank np.unique + adjacency split + window chunking — the host
+    planner in core/values/fetch.py."""
+    from repro.core.values.fetch import split_runs
+    out = []
+    for r in np.unique(rank):
+        posu = np.unique(pos[rank == r])
+        out.append((int(r), [c.tolist()
+                             for c in split_runs(posu, window)]))
+    return out
+
+
+def _runs_from_kernel(rank_s, pos_s, keep, start):
+    out = []
+    for r in np.unique(rank_s[keep]):
+        sel = keep & (rank_s == r)
+        runs = np.split(pos_s[sel], np.nonzero(start[sel])[0][1:])
+        out.append((int(r), [c.tolist() for c in runs]))
+    return out
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("window", [None, 1, 3, 16])
+@pytest.mark.parametrize("case", ["empty", "single", "dups", "mixed"])
+def test_run_coalesce_matches_host_planner(case, window, mode):
+    rng = np.random.default_rng(hash((case, window)) % (1 << 32))
+    if case == "empty":
+        rank = pos = np.zeros(0, np.int64)
+    elif case == "single":
+        rank, pos = np.array([3]), np.array([77])
+    elif case == "dups":
+        rank = np.zeros(12, np.int64)
+        pos = np.full(12, 5, np.int64)          # all-duplicate positions
+    else:
+        m = 100 if mode == "interpret" else 700   # non-tile-multiple
+        rank = rng.integers(0, 5, m)
+        pos = rng.integers(0, 40, m)
+    got = run_coalesce(rank, pos, window=window, mode=mode)
+    assert _runs_from_kernel(*got) == _coalesce_oracle(rank, pos, window)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 30)),
+                min_size=1, max_size=80),
+       st.sampled_from([None, 1, 2, 7]))
+def test_run_coalesce_property(pairs, window):
+    rank = np.array([p[0] for p in pairs], np.int64)
+    pos = np.array([p[1] for p in pairs], np.int64)
+    got = run_coalesce(rank, pos, window=window, mode="xla")
+    assert _runs_from_kernel(*got) == _coalesce_oracle(rank, pos, window)
+
+
+# -------------------------------------------- segment_reduce (adaptive)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("m,slots", [(0, 8), (1, 1), (13, 7), (300, 64),
+                                     (100, 1000)])
+def test_segment_sum_matches_bincount(m, slots, mode):
+    if mode == "interpret" and slots > 64:
+        pytest.skip("interpret mode: small shapes only")
+    rng = np.random.default_rng(m * 31 + slots)
+    ids = rng.integers(-1, slots + 2, m)        # includes out-of-range
+    got = segment_sum(ids, slots, mode=mode)
+    valid = ids[(ids >= 0) & (ids < slots)]
+    assert_array_equal(got, np.bincount(valid, minlength=slots))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=0, max_size=200),
+       st.sampled_from([1, 17, 64]))
+def test_segment_sum_property(ids, slots):
+    a = np.array(ids, np.int64)
+    got = segment_sum(a, slots, mode="xla")
+    valid = a[a < slots]
+    assert_array_equal(got, np.bincount(valid, minlength=slots))
+
+
+def _min64_oracle(vals, idx):
+    est = vals[0][idx[:, 0]]
+    for r in range(1, vals.shape[0]):
+        est = np.minimum(est, vals[r][idx[:, r]])
+    return est
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("d,w,q", [(1, 1, 1), (2, 50, 33), (4, 100, 64)])
+def test_gather_min64_reconstructs_f64_min(d, w, q, mode):
+    rng = np.random.default_rng(d * 100 + w + q)
+    vals = (rng.random((d, w)) * 1e6)           # non-negative f64
+    vals[rng.random((d, w)) < 0.2] = 0.0
+    idx = rng.integers(0, w, (q, d))
+    v = vals.view(np.uint32).reshape(d, w, 2)
+    oh, ol = gather_min64(v[..., 1], v[..., 0], idx, mode=mode)
+    got = ((oh.astype(np.uint64) << np.uint64(32))
+           | ol.astype(np.uint64)).view(np.float64)
+    assert_array_equal(got, _min64_oracle(vals, idx))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.0, 1e12, allow_nan=False), min_size=2,
+                max_size=40))
+def test_gather_min64_property(vals_flat):
+    w = len(vals_flat) // 2
+    vals = np.array(vals_flat[:2 * w], np.float64).reshape(2, w)
+    idx = np.stack([np.arange(w), np.arange(w)], axis=1)
+    v = vals.view(np.uint32).reshape(2, w, 2)
+    oh, ol = gather_min64(v[..., 1], v[..., 0], idx, mode="xla")
+    got = ((oh.astype(np.uint64) << np.uint64(32))
+           | ol.astype(np.uint64)).view(np.float64)
+    assert_array_equal(got, np.minimum(vals[0], vals[1]))
