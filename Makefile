@@ -21,14 +21,18 @@ bench-smoke:
 	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run \
 		--trace=trace_out batch_api read_path \
 		sharding adaptive_gc recovery fig02_tradeoff \
-		kernels_bench
+		fig05_spaceamp_sources kernels_bench
 	$(PY) -m repro.obs check trace_out
+	$(PY) -m benchmarks.perf_report --gate
 
 # Perfetto-viewable observability dump from the fig02 workload
-# (+ read_path for the multi_get tail) — DESIGN.md §11
+# (+ read_path for the multi_get tail, fig05 for the cause ledger)
+# — DESIGN.md §11, §13
 trace:
 	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run \
-		--trace=trace_out fig02_tradeoff read_path
+		--trace=trace_out fig02_tradeoff read_path \
+		fig05_spaceamp_sources
 	$(PY) -m repro.obs check trace_out
+	$(PY) -m repro.obs blame trace_out
 	$(PY) -m repro.obs summarize trace_out
 	@echo "open trace_out/*/trace.json in https://ui.perfetto.dev"

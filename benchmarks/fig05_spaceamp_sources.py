@@ -4,23 +4,55 @@ Paper claims: S_index exceeds the ideal 1.11 and Exposed/Valid exceeds the
 ideal 0.25 for existing KV-separated stores; under Fixed-8K the index tree
 accounts for ~half of total amplification.  Scavenger's compensated
 compaction drives S_index back to ~1.1.
+
+Next to the analytical decomposition (s_index, exposed/valid, hidden/valid
+from store state) each row carries a **live-ledger column** (DESIGN.md
+§13): the attribution ledger's write-amp decomposition by cause — bytes
+written per user byte on the flush path (pick=memtable_rotation), the
+compaction path (compensated/physical size picks), and the GC path
+(garbage-ratio / adaptive dead-byte picks, plus blobdb relocation) — so
+the paper's static source analysis can be cross-checked against measured
+per-cause bytes in the same table.
 """
 
+from repro.obs import Observer, live_breakdown
 from repro.workloads import fixed, pareto_1k
 
-from .common import ds_bytes, load_update, row
+from .common import ds_bytes, load_update, row, trace_observer
+
+# pick classes -> amplification source (ledger cause taxonomy, §13);
+# age_cutoff is blobdb's compaction-time relocation, GC-equivalent work
+_COMPACT_PICKS = ("compensated_size", "physical_size")
+_GC_PICKS = ("garbage_ratio", "adaptive_dead_byte", "age_cutoff")
+
+
+def ledger_wa(obs, store) -> dict:
+    """Per-cause write-amp columns from the live attribution ledger."""
+    lb = live_breakdown(obs, store)
+    shards = getattr(store, "shards", None) or [store]
+    uw = max(sum(s.user_write_bytes for s in shards), 1)
+    by_pick = lb["write_bytes_by_pick"]
+    return {
+        "wa_flush": by_pick.get("memtable_rotation", 0) / uw,
+        "wa_compact": sum(by_pick.get(p, 0) for p in _COMPACT_PICKS) / uw,
+        "wa_gc": sum(by_pick.get(p, 0) for p in _GC_PICKS) / uw,
+    }
 
 
 def run(scale=None):
     rows = []
     for engine in ("blobdb", "titan", "terarkdb", "scavenger"):
         for spec in (fixed(8192, ds_bytes(16)), pareto_1k(ds_bytes(8))):
-            st = load_update(engine, spec)
+            # share the module trace observer when --trace is on (so the
+            # dump carries the ledger); otherwise a local one per run
+            obs = trace_observer() or Observer()
+            st = load_update(engine, spec, observer=obs)
             s = st["store"]
             hidden = s.hidden_garbage_bytes() / max(s.valid_bytes, 1)
             rows.append(row(
                 f"fig05/{engine}/{spec.name}", st["us_per_update"],
                 s_index=st["s_index"],
                 exposed_over_valid=st["exposed_over_valid"],
-                hidden_over_valid=hidden, space_amp=st["space_amp"]))
+                hidden_over_valid=hidden, space_amp=st["space_amp"],
+                **ledger_wa(obs, s)))
     return rows

@@ -1,6 +1,7 @@
 """§Perf report: baseline vs optimized cells, from dry-run artifacts.
 
   PYTHONPATH=src:. python -m benchmarks.perf_report
+  PYTHONPATH=src:. python -m benchmarks.perf_report --gate [--gate-tol X]
 
 Besides printing the markdown table, the report appends its rows to the
 repo-root ``BENCH_adaptive.json`` trajectory file (``common.
@@ -10,14 +11,33 @@ A second table reports tail latency: p50/p95/p99 per op-class histogram
 from the observability metrics registry (DESIGN.md §11), measured on a
 fresh observed load+update run per engine and persisted to the
 ``BENCH_obs.json`` trajectory.
+
+``--gate`` is the perf **regression gate** (run by ``make bench-smoke``
+and CI): it compares the newest entry of every trajectory section in the
+``BENCH_*.json`` files against the median of its trailing window — same
+section, same bench scale — and exits nonzero when a tracked metric
+regressed past the tolerance.  It only reads trajectory files (no dry-run
+artifacts needed), so it can gate any checkout that has history.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+
 from .common import persist_trajectory, trajectory_path
-from .roofline import BASELINE, OPTIMIZED, analyze, load_cells
 
 OBS_TRAJECTORY = "BENCH_obs.json"
+# trajectory files the regression gate watches
+GATE_FILES = ("BENCH_adaptive.json", "BENCH_obs.json", "BENCH_kernels.json",
+              "BENCH_recovery.json")
+# Default tolerance: trajectory history spans machines (BENCH files are
+# committed), so wall-clock metrics need 2x headroom; tighten with
+# --gate-tol when gating same-machine runs.
+GATE_TOL = 1.0
+GATE_WINDOW = 5         # trailing entries (per section+scale) to median
+
 # op-class histograms worth tracking release-over-release (the rest stay
 # inspectable via `python -m repro.obs summarize` on a --trace dump)
 OBS_HISTS = ("write_us", "multi_get_us", "stall_us", "flush_us",
@@ -28,6 +48,7 @@ OBS_ENGINES = ("rocksdb", "scavenger", "scavenger_adaptive")
 
 
 def pairs():
+    from .roofline import load_cells
     base = {(c["arch"], c["shape"], c["mesh"]): c
             for c in load_cells(opt=False)}
     opt = {(c["arch"], c["shape"], c["mesh"]): c
@@ -38,6 +59,7 @@ def pairs():
 
 def report_rows() -> list[dict]:
     """-> trajectory rows: one per (cell, mesh, term) with the speedup."""
+    from .roofline import BASELINE, OPTIMIZED, analyze
     rows = []
     for (arch, shape, mesh), b, o in pairs():
         ab, ao = analyze(b, BASELINE), analyze(o, OPTIMIZED)
@@ -84,7 +106,83 @@ def obs_rows(engines=OBS_ENGINES) -> list[dict]:
     return rows
 
 
-def main():
+# ------------------------------------------------- regression gate (§11)
+def _row_metrics(row: dict):
+    """-> (key, {metric: value}) for a trajectory row, or None for row
+    shapes the gate does not track (e.g. perf_report's analytic cells,
+    whose baseline/optimized terms are model outputs, not measurements)."""
+    if "name" in row and "us_per_call" in row:
+        return row["name"], {"us_per_call": row["us_per_call"]}
+    if "engine" in row and "metric" in row and "p99" in row:
+        return f"{row['engine']}/{row['metric']}", {"p99": row["p99"]}
+    if "engine" in row and "us_per_update" in row:
+        key = f"{row['engine']}/{row.get('workload', '-')}"
+        out = {"us_per_update": row["us_per_update"]}
+        if "space_amp" in row:
+            out["space_amp"] = row["space_amp"]
+        return key, out
+    return None
+
+
+def gate(tol: float = GATE_TOL, window: int = GATE_WINDOW,
+         files=GATE_FILES, out=None) -> int:
+    """Compare each trajectory section's newest entry against the median
+    of its trailing window (same section, same scale).  Returns the number
+    of regressed metrics; prints one line per failure."""
+    import sys
+    out = out or sys.stdout
+    failures = checked = 0
+    for fname in files:
+        path = trajectory_path(fname)
+        if not os.path.isfile(path):
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except json.JSONDecodeError:
+            print(f"{fname}: unreadable, skipped", file=out)
+            continue
+        if not isinstance(data, list):
+            continue
+        groups: dict[tuple, list] = {}
+        for e in data:
+            if isinstance(e, dict) and "rows" in e:
+                groups.setdefault((e.get("section", "?"), e.get("scale")),
+                                  []).append(e)
+        for (section, scale), entries in sorted(groups.items()):
+            if len(entries) < 2:
+                continue        # no history yet: nothing to gate against
+            latest, trail = entries[-1], entries[-1 - window:-1]
+            hist: dict[tuple, list] = {}
+            for e in trail:
+                for r in e["rows"]:
+                    km = _row_metrics(r)
+                    if km is None:
+                        continue
+                    for m, v in km[1].items():
+                        if isinstance(v, (int, float)):
+                            hist.setdefault((km[0], m), []).append(v)
+            for r in latest["rows"]:
+                km = _row_metrics(r)
+                if km is None:
+                    continue
+                for m, v in km[1].items():
+                    vals = hist.get((km[0], m))
+                    if not vals or not isinstance(v, (int, float)):
+                        continue
+                    ref = sorted(vals)[len(vals) // 2]
+                    checked += 1
+                    if ref > 0 and v > ref * (1.0 + tol):
+                        failures += 1
+                        print(f"GATE FAIL {fname}:{section}[{scale}] "
+                              f"{km[0]} {m}: {v:.4g} vs trailing median "
+                              f"{ref:.4g} (tol {tol:.0%})", file=out)
+    print(f"perf gate: {checked} metrics checked, {failures} regressed "
+          f"(tol {tol:.0%}, window {window})", file=out)
+    return failures
+
+
+def report():
     rows = report_rows()
     print("| cell | mesh | term | baseline | optimized | x |")
     print("|---|---|---|---|---|---|")
@@ -106,5 +204,22 @@ def main():
     print(f"# obs trajectory appended to {opath}")
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.perf_report",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--gate", action="store_true",
+                    help="regression-gate the BENCH_*.json trajectories "
+                         "(exit 1 on regression); skips the report")
+    ap.add_argument("--gate-tol", type=float, default=GATE_TOL,
+                    help="allowed fractional slowdown vs trailing median")
+    ap.add_argument("--gate-window", type=int, default=GATE_WINDOW,
+                    help="trailing entries per section to compare against")
+    args = ap.parse_args(argv)
+    if args.gate:
+        return 1 if gate(tol=args.gate_tol, window=args.gate_window) else 0
+    report()
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

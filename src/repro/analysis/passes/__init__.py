@@ -11,7 +11,9 @@ each module is one architectural invariant:
   * ``config_discipline`` — numeric knobs live in EngineConfig (§3)
   * ``docs``              — docstrings cite real DESIGN sections
   * ``obs_purity``        — repro.obs is a read-only tap (§11)
+  * ``attribution``       — background work carries a cause record (§13)
 """
 
-from . import (config_discipline, docs, durability, io_accounting,  # noqa: F401
-               kernel_parity, obs_purity, purity, vectorization)
+from . import (attribution, config_discipline, docs, durability,  # noqa: F401
+               io_accounting, kernel_parity, obs_purity, purity,
+               vectorization)

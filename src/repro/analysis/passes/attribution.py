@@ -1,0 +1,90 @@
+"""attribution-coverage: background work must carry a cause record
+(DESIGN.md §10, invariant from §13).
+
+Two rules keep the amplification ledger's decomposition meaningful:
+
+  * Every ``run_job(...)`` call — the single entry point that advances
+    the bg/gc lane clocks — must pass an explicit ``trigger=`` (third
+    positional argument also accepted).  A job run without a trigger
+    silently inherits ``lane_budget`` even when it was really servicing a
+    stall or a quota, which mis-attributes its bytes in the ledger.
+  * Any function that logs a MANIFEST ``add_value_file`` /
+    ``retire_value_file`` edit must, in the same function, report the
+    space transition to the observer (``.on_space(...)``) or open a cause
+    scope (``.cause(...)``): value-file births and deaths are exactly the
+    space-amplification events the ledger decomposes, so an edit without
+    attribution is an unaccounted byte.
+
+Scoped exclusions: ``core/durability/`` (recovery replays edits; restored
+state re-attributes nothing).  Escape hatch:
+``# scavlint: allow-attribution`` on the call or the enclosing ``def``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..framework import Pass, called_attr, register
+
+SPACE_EDITS = ("add_value_file", "retire_value_file")
+ATTRIBUTORS = ("on_space", "cause")
+
+_EXCLUDED = ("src/repro/core/durability/",)
+
+
+def _edit_kind(call: ast.Call) -> str | None:
+    """First-arg string literal of a ``_log_edit``/``log_edit`` call."""
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and isinstance(call.args[0].value, str):
+        return call.args[0].value
+    return None
+
+
+@register
+class AttributionCoveragePass(Pass):
+    name = "attribution-coverage"
+    description = ("run_job calls need an explicit trigger=; value-file "
+                   "MANIFEST edits need on_space/cause attribution")
+    allow_token = "allow-attribution"
+
+    def scope(self, rel: str) -> bool:
+        return (rel.startswith("src/repro/core/")
+                and not rel.startswith(_EXCLUDED))
+
+    def check(self, sf):
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            edits, attributed = [], False
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                attr = called_attr(node)
+                if attr == "run_job" and fn.name != "run_job":
+                    has_trigger = (len(node.args) >= 3 or any(
+                        kw.arg == "trigger" for kw in node.keywords))
+                    if not has_trigger:
+                        yield self.finding(
+                            sf, node,
+                            f"{fn.name}() runs a background job without an "
+                            f"explicit trigger cause",
+                            hint="pass trigger=... to run_job so the "
+                                 "ledger attributes the job's bytes to the "
+                                 "scheduling decision, or annotate "
+                                 "'# scavlint: allow-attribution'")
+                elif attr in ("_log_edit", "log_edit") \
+                        and _edit_kind(node) in SPACE_EDITS:
+                    edits.append((node, _edit_kind(node)))
+                elif attr in ATTRIBUTORS:
+                    attributed = True
+            if attributed:
+                continue
+            for node, kind in edits:
+                yield self.finding(
+                    sf, node,
+                    f"{fn.name}() logs a {kind} MANIFEST edit without "
+                    f"attributing the space transition",
+                    hint="call store.obs.on_space(...) (or open a "
+                         "store.obs.cause(...) scope) in the same function "
+                         "so the ledger sees the value-file event, or "
+                         "annotate '# scavlint: allow-attribution'")

@@ -190,6 +190,8 @@ class EngineStrategy:
             for t in candidates:
                 store.version.retire_value_file(t.fid, None)
                 store.cache.erase_file(t.fid)
+        for t in candidates:
+            store.obs.on_space(store, "retire", t.file_bytes)
         if store.durability is not None:
             for t in candidates:
                 store._log_edit("retire_value_file", fid=t.fid)

@@ -60,27 +60,33 @@ class BlobDBEngine(EngineStrategy):
         if not reloc_rows:
             return kept
         rows = np.array(reloc_rows, np.int64)
-        # read old values
-        for i in rows.tolist():
-            t = store.version.value_files[int(vf[i])]
-            store.io.rand_read(int(cfg.value_rec_bytes(int(vsz[i]))),
-                               sio.CAT_GC_READ)
-        new_files, nfids = store.build_value_files(keys[rows], vids[rows],
-                                                   vsz[rows],
-                                                   sio.CAT_GC_WRITE)
-        # retire refs from the old files
-        for i, nf in zip(rows.tolist(), nfids.tolist()):
-            t = store.version.value_files.get(int(vf[i]))
-            if t is not None:
-                pos = int(t.find(np.array([keys[i]], np.uint64))[0])
-                if pos >= 0 and int(t.vids[pos]) == int(vids[i]):
-                    t.garbage_bytes += int(t.rec_bytes[pos])
-                    t.live_refs -= 1
-                    if t.live_refs <= 0:
-                        store.version.retire_value_file(t.fid, None)
-                        store.cache.erase_file(t.fid)
-                        store._log_edit("retire_value_file", fid=t.fid)
-            vf[i] = nf
+        # relocation is its own cause class in the attribution ledger
+        # (§13): blobdb moves bytes during compaction, not GC.  The
+        # age-cutoff pick survives the nested vsst_build op override, so
+        # relocated vSST writes stay attributable to relocation.
+        with store.obs.cause(store, op="blob_reloc", pick="age_cutoff"):
+            # read old values
+            for i in rows.tolist():
+                t = store.version.value_files[int(vf[i])]
+                store.io.rand_read(int(cfg.value_rec_bytes(int(vsz[i]))),
+                                   sio.CAT_GC_READ)
+            new_files, nfids = store.build_value_files(keys[rows],
+                                                       vids[rows], vsz[rows],
+                                                       sio.CAT_GC_WRITE)
+            # retire refs from the old files
+            for i, nf in zip(rows.tolist(), nfids.tolist()):
+                t = store.version.value_files.get(int(vf[i]))
+                if t is not None:
+                    pos = int(t.find(np.array([keys[i]], np.uint64))[0])
+                    if pos >= 0 and int(t.vids[pos]) == int(vids[i]):
+                        t.garbage_bytes += int(t.rec_bytes[pos])
+                        t.live_refs -= 1
+                        if t.live_refs <= 0:
+                            store.version.retire_value_file(t.fid, None)
+                            store.cache.erase_file(t.fid)
+                            store._log_edit("retire_value_file", fid=t.fid)
+                            store.obs.on_space(store, "retire", t.file_bytes)
+                vf[i] = nf
         return (keys, seqs, ety, vids, vsz, vf)
 
 

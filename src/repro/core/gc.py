@@ -118,5 +118,8 @@ def run_gc(store, candidates: list[SSTable]) -> None:
         store.obs.on_op(store, "gc_rewrite_bytes", rewrite)
         store.obs.on_op(store, "gc_reclaimed_bytes", reclaimed)
         store.obs.on_op(store, "gc_input_files", len(candidates))
+        # space-event ledger (§13): rewrite/reclaim bytes by cause
+        store.obs.on_space(store, "gc_rewrite", rewrite)
+        store.obs.on_space(store, "gc_reclaim", reclaimed)
     finally:
         store.in_gc = False

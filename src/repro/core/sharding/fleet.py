@@ -209,12 +209,16 @@ class FleetScheduler:
                 picked = self._pick_compact()
                 if picked is None:
                     break
-                self.shards[picked[0]].run_job(picked[1], "bg")
+                self.shards[picked[0]].run_job(picked[1], "bg",
+                                               trigger="lane_budget",
+                                               policy=self.policy)
             while self.total_gc_us() < self.total_fg_us():
                 picked = self._pick_gc()
                 if picked is None:
                     break
-                self.shards[picked[0]].run_job(picked[1], "gc")
+                self.shards[picked[0]].run_job(picked[1], "gc",
+                                               trigger="lane_budget",
+                                               policy=self.policy)
         finally:
             self._pumping = False
 
@@ -238,7 +242,8 @@ class FleetScheduler:
             # from the fleet quota path, before per-shard write dispatch),
             # so each is recorded for lane tiling (DESIGN.md §11)
             shard.obs.lane_sync(shard, lane, t_lane)
-            shard.run_job(picked[1], lane)
+            shard.run_job(picked[1], lane, trigger="quota_stall",
+                          policy=self.policy)
             t_fg = shard.io.fg_clock_us
             shard.io.lanes["fg"] = max(t_fg, shard.io.lanes[lane])
             shard.obs.lane_sync(shard, "fg", t_fg)
@@ -254,7 +259,8 @@ class FleetScheduler:
                 picked, lane = self._pick_gc(), "gc"
             if picked is None:
                 break
-            self.shards[picked[0]].run_job(picked[1], lane)
+            self.shards[picked[0]].run_job(picked[1], lane, trigger="drain",
+                                           policy=self.policy)
         for s in self.shards:
             m = max(s.io.lanes.values())
             for k in s.io.lanes:

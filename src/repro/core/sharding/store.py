@@ -215,7 +215,8 @@ class ShardedStore(ScalarOps):
             # shard holding the fleet wall clock so aggregate stall_s stays
             # comparable between --shards 1 and --shards N runs
             s = max(self.shards, key=lambda s: s.io.fg_clock_us)
-            with s.obs.span(s, "quota_slowdown"):
+            with s.obs.span(s, "quota_slowdown",
+                            cause={"trigger": "quota_stall"}):
                 s.io.stall(s.cfg.slowdown_us_per_write)
             s.stall_us += s.cfg.slowdown_us_per_write
             s.obs.on_stall(s, s.cfg.slowdown_us_per_write, "quota_slowdown")

@@ -174,7 +174,8 @@ class Store(ScalarOps):
                         self.memtable = Memtable(cfg)
                         self.pump()
                         self._stall_while(
-                            lambda: len(self.immutables) > cfg.max_immutables)
+                            lambda: len(self.immutables) > cfg.max_immutables,
+                            trigger="memtable_stall")
             finally:
                 self.in_batch_write = False
 
@@ -273,13 +274,27 @@ class Store(ScalarOps):
             return ("gc", gcmod.gc_batch(self, cands))
         return None
 
-    def run_job(self, job, lane: str) -> None:
+    def _job_pick(self, kind: str) -> str:
+        """Policy decision that selects work of this kind (ledger §13)."""
+        if kind == "flush":
+            return "memtable_rotation"
+        if kind == "compact":
+            return ("compensated_size" if self.cfg.compensated_compaction
+                    else "physical_size")
+        return ("adaptive_dead_byte" if self.cfg.adaptive_enabled
+                else "garbage_ratio")
+
+    def run_job(self, job, lane: str, trigger: str = "lane_budget",
+                policy: str | None = None) -> None:
         prev_lane = self.io.lane
         self.io.lane = lane
+        cause = {"trigger": trigger, "pick": self._job_pick(job[0])}
+        if policy is not None:
+            cause["policy"] = policy
         try:
             # span on the job's lane: an injected CrashPoint still records
             # the partial span (the with-block exits), keeping lane tiling
-            with self.obs.span(self, job[0], lane=lane):
+            with self.obs.span(self, job[0], lane=lane, cause=cause):
                 if job[0] == "flush":
                     self._flush_job()
                 elif job[0] == "compact":
@@ -298,14 +313,15 @@ class Store(ScalarOps):
             job = self.next_compact_job()
             if job is None:
                 break
-            self.run_job(job, "bg")
+            self.run_job(job, "bg", trigger="lane_budget")
         while self.io.gc_clock_us < self.io.fg_clock_us:
             job = self.next_gc_job()
             if job is None:
                 break
-            self.run_job(job, "gc")
+            self.run_job(job, "gc", trigger="lane_budget")
 
-    def _stall_while(self, cond, prefer_gc: bool = False) -> None:
+    def _stall_while(self, cond, prefer_gc: bool = False,
+                     trigger: str = "write_stall") -> None:
         """Foreground blocked on background progress."""
         t0 = self.io.fg_clock_us
         while cond():
@@ -325,7 +341,7 @@ class Store(ScalarOps):
             # lane track still tiles; the fg jump below is inside the
             # caller's write span, which already covers it (§11)
             self.obs.lane_sync(self, lane, t_lane)
-            self.run_job(job, lane)
+            self.run_job(job, lane, trigger=trigger)
             self.io.lanes["fg"] = max(self.io.fg_clock_us,
                                       self.io.lanes[lane])
         stalled = self.io.fg_clock_us - t0
@@ -345,7 +361,7 @@ class Store(ScalarOps):
                 job, lane = self.next_gc_job(), "gc"
             if job is None:
                 break
-            self.run_job(job, lane)
+            self.run_job(job, lane, trigger="drain")
         m = max(self.io.lanes.values())
         for k in self.io.lanes:
             t0 = self.io.lanes[k]
@@ -388,9 +404,15 @@ class Store(ScalarOps):
             self.durability.close()
 
     def _log_edit(self, kind: str, **data) -> None:
-        """Append a MANIFEST VersionEdit (no-op when durability is off)."""
+        """Append a MANIFEST VersionEdit (no-op when durability is off).
+
+        The host-side byte cost of the edit is reported to the observer
+        (ledger §13: MANIFEST bytes decompose by cause like device bytes)."""
         if self.durability is not None:
+            before = self.durability.manifest.bytes_written
             self.durability.log_edit(kind, **data)
+            self.obs.on_edit(self, kind,
+                             self.durability.manifest.bytes_written - before)
 
     def arm_crash(self, point: str, hits: int = 1) -> None:
         """Crash-injection: raise ``CrashPoint`` at the ``hits``-th pass
@@ -423,9 +445,11 @@ class Store(ScalarOps):
             self.immutables.append(self.memtable)
             self.memtable = Memtable(cfg)
         self.pump()
-        self._stall_while(lambda: len(self.immutables) > cfg.max_immutables)
+        self._stall_while(lambda: len(self.immutables) > cfg.max_immutables,
+                          trigger="memtable_stall")
         self._stall_while(
-            lambda: len(self.version.levels[0]) >= cfg.l0_stop)
+            lambda: len(self.version.levels[0]) >= cfg.l0_stop,
+            trigger="l0_stop")
         if len(self.version.levels[0]) >= cfg.l0_slowdown:
             delay = rec_bytes / cfg.delayed_write_rate   # us at MB/s
             self.io.stall(delay)
@@ -451,7 +475,7 @@ class Store(ScalarOps):
                 return (seen < cfg.quota_stall_rounds
                         and self.version.total_bytes()
                         >= cfg.space_quota_bytes)
-            self._stall_while(over, prefer_gc=True)
+            self._stall_while(over, prefer_gc=True, trigger="quota_stall")
         else:
             self.io.stall(cfg.slowdown_us_per_write)
             self.stall_us += cfg.slowdown_us_per_write

@@ -19,6 +19,8 @@ import numpy as np
 from ..engine.tables import (TEMP_COLD, TEMP_HOT, TEMP_WARM, SSTable,
                              build_vsst)
 
+TEMP_NAMES = {TEMP_HOT: "hot", TEMP_WARM: "warm", TEMP_COLD: "cold"}
+
 
 def build_value_files(store, keys, vids, vsizes, cat: str):
     """Build vSST(s) from sorted records, temperature-split when enabled.
@@ -42,19 +44,23 @@ def build_value_files(store, keys, vids, vsizes, cat: str):
         idx = np.nonzero(mask)[0]
         if len(idx) == 0:
             continue
-        rec = cfg.value_rec_bytes(vsizes[idx]).astype(np.int64)
-        cum = np.cumsum(rec) - rec
-        fno = cum // cfg.vsst_bytes
-        for f in np.unique(fno):
-            m = idx[fno == f]
-            t = build_vsst(cfg, keys[m], np.full(len(m), store.seq,
-                                                 np.uint64),
-                           vids[m], vsizes[m], is_hot=temp == TEMP_HOT,
-                           temperature=temp)
-            store.version.add_value_file(t)
-            store.io.seq_write(t.file_bytes, cat)
-            store._log_edit("add_value_file", fid=t.fid,
-                            nbytes=t.file_bytes, temperature=int(temp))
-            fid_per_rec[m] = t.fid
-            files.append(t)
+        # per-temperature cause scope: vSST writes decompose by
+        # temperature class in the attribution ledger (§13)
+        with store.obs.cause(store, op="vsst_build", temp=TEMP_NAMES[temp]):
+            rec = cfg.value_rec_bytes(vsizes[idx]).astype(np.int64)
+            cum = np.cumsum(rec) - rec
+            fno = cum // cfg.vsst_bytes
+            for f in np.unique(fno):
+                m = idx[fno == f]
+                t = build_vsst(cfg, keys[m], np.full(len(m), store.seq,
+                                                     np.uint64),
+                               vids[m], vsizes[m], is_hot=temp == TEMP_HOT,
+                               temperature=temp)
+                store.version.add_value_file(t)
+                store.io.seq_write(t.file_bytes, cat)
+                store._log_edit("add_value_file", fid=t.fid,
+                                nbytes=t.file_bytes, temperature=int(temp))
+                store.obs.on_space(store, "vsst_add", t.file_bytes)
+                fid_per_rec[m] = t.fid
+                files.append(t)
     return files, fid_per_rec

@@ -44,10 +44,13 @@ def expose_garbage(store, keys, ety, vids, vsizes, vfiles) -> None:
         nhit = int(hit.sum())
         if nhit == 0:
             continue
-        t.garbage_bytes += int(t.rec_bytes[pos[hit]].sum())
+        exposed = int(t.rec_bytes[pos[hit]].sum())
+        t.garbage_bytes += exposed
+        store.obs.on_space(store, "expose", exposed)
         if cfg.gc_scheme == "compaction":
             t.live_refs -= nhit
             if t.live_refs <= 0:
                 store.version.retire_value_file(t.fid, None)
                 store._log_edit("retire_value_file", fid=t.fid)
+                store.obs.on_space(store, "retire", t.file_bytes)
                 store.cache.erase_file(t.fid)

@@ -1,0 +1,77 @@
+"""Request-scoped causality: span ids, parent/child links, and the cause
+stack behind the amplification ledger (DESIGN.md §13).
+
+Two small pieces of shared state, both owned by the ``Observer``:
+
+  * **Span identity** — every span gets a monotonically increasing
+    ``id``; nesting follows the (synchronous) Python call stack, so the
+    parent of a span is simply the span that was open when it began.  A
+    span opened with an empty stack starts a new *trace*; children
+    inherit the trace id.  Because the simulator is single-threaded,
+    this gives exact request-scoped traces: a GC job force-run inside a
+    stalled ``write`` is a *child* of that write's span, which is how a
+    stalled op shows the background job that blocked it.
+  * **Origin** — the op class of the innermost (or, when the stack is
+    empty, the most recent) user operation.  Background work scheduled
+    synchronously after an op (``pump()``) is attributed to that op: the
+    deterministic two-lane scheduler only runs background jobs in
+    response to foreground progress, so "most recent user op" *is* the
+    causal trigger.  A cause scope may pin an explicit origin (e.g. the
+    serving tier's admission writes), which user-op spans then do not
+    override.
+
+Ids are allocated deterministically (a counter, no wall clock), so traces
+are reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+# Foreground op classes that (re)set the causal origin.
+USER_OPS = ("write", "multi_get", "multi_scan")
+
+
+class Frame:
+    """One open span: identity plus the ledger token to restore on exit."""
+
+    __slots__ = ("span_id", "parent_id", "trace_id", "token", "label")
+
+    def __init__(self, span_id: int, parent_id: int, trace_id: int):
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.trace_id = trace_id
+        self.token = None
+        self.label = None
+
+
+class Causality:
+    """Deterministic span-id allocator + global synchronous span stack."""
+
+    def __init__(self):
+        self._next_id = 1
+        self.stack: list[Frame] = []
+        self.origin = "init"
+
+    def push(self) -> Frame:
+        sid = self._next_id
+        self._next_id += 1
+        if self.stack:
+            top = self.stack[-1]
+            frame = Frame(sid, top.span_id, top.trace_id)
+        else:
+            frame = Frame(sid, 0, sid)
+        self.stack.append(frame)
+        return frame
+
+    def pop(self, frame: Frame) -> None:
+        if self.stack and self.stack[-1] is frame:
+            self.stack.pop()
+        elif frame in self.stack:       # defensive: out-of-order exit
+            self.stack.remove(frame)
+
+    def current_trace(self) -> int:
+        """Trace id of the innermost open span (0 when idle)."""
+        return self.stack[-1].trace_id if self.stack else 0
+
+    def note_user_op(self, name: str) -> None:
+        if name in USER_OPS:
+            self.origin = name

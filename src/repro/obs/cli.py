@@ -1,5 +1,5 @@
 """``python -m repro.obs`` — summarize/convert/verify observability dumps
-(DESIGN.md §11).
+(DESIGN.md §11, §13).
 
 Works on the dump directories ``Observer.dump`` (and
 ``benchmarks/run.py --trace=DIR``) produce::
@@ -7,9 +7,14 @@ Works on the dump directories ``Observer.dump`` (and
     summarize DIR   percentile table (p50/p95/p99) for every histogram
     convert DIR     events.json -> trace.json (Chrome trace-event JSON)
     check DIR       verify per-(shard, lane) span durations tile the
-                    recorded SimIO lane clocks (exit 1 on mismatch)
+                    recorded SimIO lane clocks AND the ledger conservation
+                    law (per-cause bytes sum byte-identically to the SimIO
+                    per-category counters); exit 1 on mismatch
     dashboard DIR   text dashboard: lane utilization, amplification
-                    breakdown, top span classes, health tail
+                    breakdown, per-cause blame bars, tail exemplars,
+                    top span classes
+    blame DIR       per-cause write/space amplification table from
+                    ledger.json; also writes blame.json next to it
 
 DIR may be a single dump directory (contains metrics.json) or a parent
 holding one dump directory per benchmark module.
@@ -22,6 +27,8 @@ import json
 import os
 import sys
 
+from .ledger import blame_rows, check_conservation
+from .metrics import LogHist
 from .trace import SpanTracer, dump_chrome_trace
 
 
@@ -94,7 +101,10 @@ def convert(dirs: list[str]) -> None:
 
 def check(dirs: list[str], rtol: float = 1e-6) -> int:
     """Verify span tiling: per-(shard, lane) span durations must sum to
-    the recorded final lane clocks within float tolerance."""
+    the recorded final lane clocks within float tolerance.  When the dump
+    carries a ledger.json, also verify the §13 conservation law: per-cause
+    ledger bytes must sum *byte-identically* (exact integers) to the SimIO
+    per-category counters."""
     failures = 0
     for d in dirs:
         tracer = SpanTracer.from_state(_load(os.path.join(d, "events.json")))
@@ -112,9 +122,18 @@ def check(dirs: list[str], rtol: float = 1e-6) -> int:
                     dir_fail += 1
                     print(f"{d}: FAIL shard {shard} lane {lane}: "
                           f"spans sum to {got:.3f}us, clock {want:.3f}us")
+        ledger_path = os.path.join(d, "ledger.json")
+        ncauses = 0
+        if os.path.isfile(ledger_path):
+            state = _load(ledger_path)
+            ncauses = sum(len(sh.get("cells", {}))
+                          for sh in state.get("shards", {}).values())
+            for msg in check_conservation(state):
+                dir_fail += 1
+                print(f"{d}: FAIL ledger conservation: {msg}")
         if dir_fail == 0:
             print(f"{d}: OK ({len(tracer.events)} events, "
-                  f"{len(tracer.shard_lanes)} shards)")
+                  f"{len(tracer.shard_lanes)} shards, {ncauses} causes)")
         failures += dir_fail
     return failures
 
@@ -122,6 +141,63 @@ def check(dirs: list[str], rtol: float = 1e-6) -> int:
 def _bar(frac: float, width: int = 30) -> str:
     n = int(round(max(0.0, min(1.0, frac)) * width))
     return "#" * n + "-" * (width - n)
+
+
+def _cause_str(row: dict) -> str:
+    """Compact cause label: op<-origin [trigger/pick/policy/temp]."""
+    bits = [f"{row.get('op', '?')}<-{row.get('origin', '?')}"]
+    extra = [row[k] for k in ("trigger", "pick", "policy", "temp")
+             if row.get(k)]
+    if extra:
+        bits.append("[" + "/".join(extra) + "]")
+    return " ".join(bits)
+
+
+def blame(dirs: list[str], out=None) -> int:
+    """Per-cause amplification table from ledger.json (§13); writes the
+    machine-readable rollup to blame.json next to it."""
+    out = out or sys.stdout
+    missing = 0
+    for d in dirs:
+        path = os.path.join(d, "ledger.json")
+        if not os.path.isfile(path):
+            print(f"{d}: no ledger.json (run with the ledger-bearing "
+                  "Observer)", file=out)
+            missing += 1
+            continue
+        state = _load(path)
+        rows = blame_rows(state)
+        conservation = check_conservation(state)
+        bpath = os.path.join(d, "blame.json")
+        with open(bpath, "w") as f:
+            json.dump({"rows": rows, "conservation_failures": conservation},
+                      f, indent=1, sort_keys=True)
+        print(f"== {d} ==", file=out)
+        total_wb = sum(r["write_bytes"] for r in rows) or 1
+        print(f"{'cause':<44} {'write':>8} {'read':>8} {'wa':>6}  share",
+              file=out)
+        for r in rows:
+            if not (r["write_bytes"] or r["read_bytes"] or r["space"]):
+                continue
+            share = r["write_bytes"] / total_wb
+            print(f"{_cause_str(r):<44} {_fmt(float(r['write_bytes'])):>8} "
+                  f"{_fmt(float(r['read_bytes'])):>8} {r['wa']:>6.3f}  "
+                  f"{_bar(share, 20)} {share:5.1%}", file=out)
+        space_rows = [r for r in rows if r["space"] or r["edits"]]
+        if space_rows:
+            print("space/edit events by cause:", file=out)
+            for r in space_rows:
+                evs = {**r["space"], **{f"edit:{k}": v
+                                        for k, v in r["edits"].items()}}
+                print(f"  {_cause_str(r):<42} " + "  ".join(
+                    f"{k}={_fmt(float(v))}" for k, v in sorted(evs.items())),
+                    file=out)
+        status = "FAIL" if conservation else "OK"
+        print(f"conservation: {status}  -> {bpath}", file=out)
+        for msg in conservation:
+            print(f"  {msg}", file=out)
+        missing += len(conservation)
+    return missing
 
 
 def dashboard(dirs: list[str], out=None) -> None:
@@ -158,6 +234,36 @@ def dashboard(dirs: list[str], out=None) -> None:
             print(f"  garbage ratio p50 {gr.get('p50', 0):.3f}  "
                   f"p90 {gr.get('p90', 0):.3f}  "
                   f"max {gr.get('max', 0):.3f}", file=out)
+        # per-cause amplification bars (§13 ledger)
+        ledger_path = os.path.join(d, "ledger.json")
+        if os.path.isfile(ledger_path):
+            rows = [r for r in blame_rows(_load(ledger_path))
+                    if r["write_bytes"]]
+            total_wb = sum(r["write_bytes"] for r in rows) or 1
+            if rows:
+                print("write bytes by cause:", file=out)
+                for r in rows[:8]:
+                    share = r["write_bytes"] / total_wb
+                    print(f"  {_cause_str(r):<42} {_bar(share, 20)} "
+                          f"{share:5.1%} ({_fmt(float(r['write_bytes']))})",
+                          file=out)
+        # tail exemplars: p99 bucket -> trace id, per op-class histogram
+        metrics = _load(os.path.join(d, "metrics.json"))
+        tails = []
+        for name in sorted(metrics):
+            for s in metrics[name]:
+                if s.get("type") != "hist" or not s.get("exemplars"):
+                    continue
+                h = LogHist.from_state(s)
+                ex = h.exemplar_at(0.99)
+                if ex is not None:
+                    tails.append((name, _label_str(s["labels"]),
+                                  s["p99"], ex))
+        if tails:
+            print("tail exemplars (p99 -> trace id):", file=out)
+            for name, labels, p99, ex in tails[:10]:
+                print(f"  {name:<24} {labels:<36} p99 {_fmt(p99):>9}  "
+                      f"trace {ex}", file=out)
         # top span classes by total lane time
         totals: dict[str, float] = {}
         for ev in events.get("events", ()):
@@ -173,7 +279,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.obs",
                                  description=__doc__.splitlines()[0])
     sub = ap.add_subparsers(dest="cmd", required=True)
-    for cmd in ("summarize", "convert", "check", "dashboard"):
+    for cmd in ("summarize", "convert", "check", "dashboard", "blame"):
         p = sub.add_parser(cmd)
         p.add_argument("dir", help="dump directory (or parent of dumps)")
     args = ap.parse_args(argv)
@@ -184,6 +290,8 @@ def main(argv=None) -> int:
         convert(dirs)
     elif args.cmd == "dashboard":
         dashboard(dirs)
+    elif args.cmd == "blame":
+        return 1 if blame(dirs) else 0
     else:
         return 1 if check(dirs) else 0
     return 0

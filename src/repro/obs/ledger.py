@@ -1,0 +1,287 @@
+"""Amplification attribution ledger: every simulated byte gets a cause
+(DESIGN.md §13).
+
+The ledger decomposes write/read amplification *by cause*: each cell is
+keyed by a **cause record** — ``origin`` (the user op class that caused
+the work), ``op`` (the job or path doing the I/O: write, flush, compact,
+gc, vsst_build, blob_reloc, …), ``trigger`` (the scheduling decision:
+user, lane_budget, memtable_stall, l0_stop, quota_stall, drain, …),
+plus optional ``pick`` (the policy that chose the job: compensated_size /
+physical_size / garbage_ratio / adaptive_dead_byte), ``policy`` (fleet
+scheduler) and ``temp`` (temperature class of the written file).
+
+Attribution is *exclusive* (self-cost style): per registered store there
+is one current cause; pushing/popping a cause settles the byte counters
+accumulated since the last boundary into the cause that was active.
+Because settlement reads the same integer ``SimIO`` per-category
+counters the device maintains, the decomposition obeys a machine-checked
+**conservation law**: for every (shard, category) the per-cause ledger
+bytes sum *byte-identically* to ``final − base`` of the SimIO counter —
+the same tiling-style invariant §11 enforces for span durations on the
+lane clocks.  ``python -m repro.obs check`` verifies it on every dump.
+
+Space events (garbage exposed, GC rewrite/reclaim, vSST adds, value-file
+retirements) and host-side MANIFEST edit bytes ride on the same cause
+keys, so space amplification decomposes by cause next to write amp
+(``python -m repro.obs blame``).
+
+The ledger is observer-local state: it *reads* SimIO counters and never
+touches the store (the §11 obs-purity contract), so runs with the ledger
+enabled stay byte-identical to unobserved runs.
+"""
+
+from __future__ import annotations
+
+import json
+
+# Conservation-checked SimIO counter fields (all integer-valued).
+COUNTER_FIELDS = ("read_bytes", "write_bytes", "read_ops", "write_ops")
+
+ROOT_CAUSE = {"origin": "init", "op": "init", "trigger": "init"}
+
+
+def cause_key(cause: dict) -> str:
+    """Canonical string form of a cause record (stable across runs)."""
+    return "|".join(f"{k}={cause[k]}" for k in sorted(cause))
+
+
+def parse_cause(key: str) -> dict:
+    return dict(part.split("=", 1) for part in key.split("|") if part)
+
+
+class Cell:
+    """Per-(shard, cause) accumulator: I/O counters + space/edit events."""
+
+    __slots__ = COUNTER_FIELDS + ("space", "edits")
+
+    def __init__(self):
+        for f in COUNTER_FIELDS:
+            setattr(self, f, {})
+        self.space: dict[str, int] = {}
+        self.edits: dict[str, int] = {}
+
+    def state_dict(self) -> dict:
+        out = {f: dict(getattr(self, f)) for f in COUNTER_FIELDS
+               if getattr(self, f)}
+        if self.space:
+            out["space"] = dict(self.space)
+        if self.edits:
+            out["edits"] = dict(self.edits)
+        return out
+
+
+class AmplificationLedger:
+    """Byte-exact cause attribution over the SimIO per-category counters."""
+
+    def __init__(self):
+        # label -> cause_key -> Cell
+        self.cells: dict[str, dict[str, Cell]] = {}
+        self.base: dict[str, dict] = {}         # counters at registration
+        self.final: dict[str, dict] = {}        # counters at finish()
+        self.meta: dict[str, dict] = {}         # per-store derived stats
+        self._cur: dict[str, tuple[dict, bool]] = {}   # label -> (cause, pin)
+        self._ckpt: dict[str, dict] = {}        # label -> last-settled view
+
+    # ------------------------------------------------------------ lifecycle
+    @staticmethod
+    def _counters(io) -> dict:
+        return {f: dict(getattr(io, f)) for f in COUNTER_FIELDS}
+
+    def register(self, label: str, io) -> None:
+        snap = self._counters(io)
+        self.base[label] = {f: dict(v) for f, v in snap.items()}
+        self._ckpt[label] = snap
+        self._cur[label] = (dict(ROOT_CAUSE), False)
+        self.cells.setdefault(label, {})
+
+    def _cell(self, label: str, cause: dict) -> Cell:
+        key = cause_key(cause)
+        cell = self.cells[label].get(key)
+        if cell is None:
+            cell = self.cells[label][key] = Cell()
+        return cell
+
+    def settle(self, label: str, io) -> None:
+        """Charge counter deltas since the last boundary to the current
+        cause.  Integer adds only — conservation is exact by construction."""
+        ckpt = self._ckpt.get(label)
+        if ckpt is None:
+            return
+        cause, _ = self._cur[label]
+        cell = None
+        for f in COUNTER_FIELDS:
+            now = getattr(io, f)
+            before = ckpt[f]
+            for cat, v in now.items():
+                d = v - before.get(cat, 0)
+                if d:
+                    if cell is None:
+                        cell = self._cell(label, cause)
+                    bucket = getattr(cell, f)
+                    bucket[cat] = bucket.get(cat, 0) + d
+                before[cat] = v
+
+    # --------------------------------------------------------- cause frames
+    def push(self, label: str, io, overrides: dict,
+             global_origin: str | None = None, pin: bool = False):
+        """Enter a cause scope; returns a token for ``pop``.
+
+        ``overrides`` merge over the store's current cause; when
+        ``global_origin`` is given and the current origin is not pinned,
+        the merged cause's origin is refreshed from it (span-push rule —
+        background jobs are attributed to the live user op)."""
+        prev = self._cur.get(label)
+        if prev is None:                # unregistered store: no-op token
+            return None
+        self.settle(label, io)
+        cur, pinned = prev
+        merged = dict(cur)
+        if global_origin is not None and not pinned:
+            merged["origin"] = global_origin
+        merged.update(overrides)
+        self._cur[label] = (merged, pinned or pin or "origin" in overrides)
+        return prev
+
+    def pop(self, label: str, io, token) -> None:
+        if token is None:
+            return
+        self.settle(label, io)
+        self._cur[label] = token
+
+    # --------------------------------------------------------- side ledgers
+    def charge_space(self, label: str, event: str, nbytes: int) -> None:
+        cur = self._cur.get(label)
+        if cur is None or nbytes == 0:
+            return
+        cell = self._cell(label, cur[0])
+        cell.space[event] = cell.space.get(event, 0) + int(nbytes)
+
+    def charge_edit(self, label: str, kind: str, nbytes: int) -> None:
+        cur = self._cur.get(label)
+        if cur is None:
+            return
+        cell = self._cell(label, cur[0])
+        cell.edits[kind] = cell.edits.get(kind, 0) + int(nbytes)
+
+    # ------------------------------------------------------------ reporting
+    def finish(self, label: str, io, meta: dict | None = None) -> None:
+        self.settle(label, io)
+        self.final[label] = self._counters(io)
+        if meta is not None:
+            self.meta[label] = meta
+
+    def state_dict(self) -> dict:
+        shards = {}
+        for label in sorted(self.cells):
+            shards[label] = {
+                "base": self.base.get(label, {}),
+                "final": self.final.get(label, {}),
+                "meta": self.meta.get(label, {}),
+                "cells": {k: c.state_dict()
+                          for k, c in sorted(self.cells[label].items())},
+            }
+        return {"shards": shards}
+
+    def dump_json(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.state_dict(), f, indent=1, sort_keys=True)
+
+
+# ===================================================== conservation check
+def check_conservation(state: dict) -> list[str]:
+    """Verify the ledger conservation law on a ``ledger.json`` state:
+    per (shard, category) the cause cells must sum *exactly* (integer
+    equality, no tolerance) to ``final − base`` of the SimIO counter.
+    Returns a list of human-readable failures (empty = pass)."""
+    failures = []
+    for label, sh in sorted(state.get("shards", {}).items()):
+        final, base = sh.get("final", {}), sh.get("base", {})
+        if not final:
+            failures.append(f"shard {label}: no final counter snapshot "
+                            "(finish() never ran)")
+            continue
+        for f in COUNTER_FIELDS:
+            want = {cat: v - base.get(f, {}).get(cat, 0)
+                    for cat, v in final.get(f, {}).items()}
+            got: dict[str, int] = {}
+            for cell in sh.get("cells", {}).values():
+                for cat, v in cell.get(f, {}).items():
+                    got[cat] = got.get(cat, 0) + v
+            for cat in sorted(set(want) | set(got)):
+                w, g = want.get(cat, 0), got.get(cat, 0)
+                if w != g:
+                    failures.append(
+                        f"shard {label}: {f}[{cat}] ledger sums to {g}, "
+                        f"SimIO counted {w}")
+    return failures
+
+
+# ============================================================ blame rollup
+def blame_rows(state: dict) -> list[dict]:
+    """Aggregate ledger cells across shards into per-cause rows with
+    write-amp / space-event decompositions (the ``obs blame`` table).
+
+    ``wa`` is the cause's share of write amplification: cause write bytes
+    over total user write bytes (WAL excluded, matching ``stats()``)."""
+    user_wb = sum(m.get("user_write_bytes", 0)
+                  for m in (sh.get("meta", {})
+                            for sh in state.get("shards", {}).values()))
+    agg: dict[str, dict] = {}
+    for sh in state.get("shards", {}).values():
+        for key, cell in sh.get("cells", {}).items():
+            row = agg.setdefault(key, {"write_bytes": 0, "read_bytes": 0,
+                                       "space": {}, "edits": {}})
+            row["write_bytes"] += sum(cell.get("write_bytes", {}).values())
+            row["read_bytes"] += sum(cell.get("read_bytes", {}).values())
+            for name, field in (("space", "space"), ("edits", "edits")):
+                for k, v in cell.get(field, {}).items():
+                    row[name][k] = row[name].get(k, 0) + v
+    rows = []
+    for key in sorted(agg):
+        row = agg[key]
+        cause = parse_cause(key)
+        wal = cause.get("op") in ("write",)     # user writes carry the WAL
+        rows.append({
+            "cause": key,
+            **cause,
+            "write_bytes": row["write_bytes"],
+            "read_bytes": row["read_bytes"],
+            "wa": (row["write_bytes"] / user_wb) if user_wb and not wal
+            else 0.0,
+            "space": row["space"],
+            "edits": row["edits"],
+        })
+    rows.sort(key=lambda r: -(r["write_bytes"] + r["read_bytes"]))
+    return rows
+
+
+# ===================================================== live benchmark view
+def live_breakdown(observer, store) -> dict:
+    """Settle and roll up the ledger for one (possibly sharded) live store:
+    write bytes per ``op`` cause class + space-event totals.  Read-only on
+    the store (obs-purity §11); used by ``benchmarks/fig05`` for the
+    live-ledger column next to the paper's analytical decomposition."""
+    ledger = observer.ledger
+    shards = getattr(store, "shards", None) or [store]
+    labels = []
+    for s in shards:
+        label = getattr(s, "obs_label", None)
+        if label in ledger.cells:
+            ledger.settle(label, s.io)
+            labels.append(label)
+    by_op: dict[str, int] = {}
+    by_pick: dict[str, int] = {}
+    space: dict[str, int] = {}
+    for label in labels:
+        for key, cell in ledger.cells[label].items():
+            cause = parse_cause(key)
+            wb = sum(cell.write_bytes.values())
+            op = cause.get("op", "?")
+            by_op[op] = by_op.get(op, 0) + wb
+            pick = cause.get("pick")
+            if pick:
+                by_pick[pick] = by_pick.get(pick, 0) + wb
+            for k, v in cell.space.items():
+                space[k] = space.get(k, 0) + v
+    return {"write_bytes_by_op": by_op, "write_bytes_by_pick": by_pick,
+            "space_events": space}

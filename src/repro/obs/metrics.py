@@ -70,9 +70,15 @@ class LogHist:
     Values ``<= 0`` land in a dedicated zero bucket (stall times and byte
     deltas are frequently exactly zero); positive values go to quarter-
     octave buckets with exact binary bounds (see module docstring).
+
+    Each positive bucket can keep one **exemplar** — an opaque id (the
+    observer stores the trace id of the span whose value landed there,
+    DESIGN.md §13) with last-observation-wins semantics, so a tail
+    quantile links back to a concrete span in the Chrome trace export.
     """
 
-    __slots__ = ("buckets", "zeros", "count", "total", "vmin", "vmax")
+    __slots__ = ("buckets", "zeros", "count", "total", "vmin", "vmax",
+                 "exemplars")
 
     def __init__(self):
         self.buckets: dict[int, int] = {}
@@ -81,8 +87,9 @@ class LogHist:
         self.total = 0.0
         self.vmin = math.inf
         self.vmax = -math.inf
+        self.exemplars: dict[int, object] = {}
 
-    def record(self, value: float, n: int = 1):
+    def record(self, value: float, n: int = 1, exemplar=None):
         value = float(value)
         self.count += n
         self.total += value * n
@@ -95,6 +102,8 @@ class LogHist:
         else:
             idx = bucket_index(value)
             self.buckets[idx] = self.buckets.get(idx, 0) + n
+            if exemplar is not None:
+                self.exemplars[idx] = exemplar
 
     def merge(self, other: "LogHist") -> "LogHist":
         self.count += other.count
@@ -104,6 +113,8 @@ class LogHist:
         self.vmax = max(self.vmax, other.vmax)
         for idx, n in other.buckets.items():
             self.buckets[idx] = self.buckets.get(idx, 0) + n
+        for idx, ex in other.exemplars.items():
+            self.exemplars.setdefault(idx, ex)
         return self
 
     def quantile(self, q: float) -> float:
@@ -125,12 +136,40 @@ class LogHist:
                 return max(self.vmin, min(bucket_upper(idx), self.vmax))
         return self.vmax
 
+    def exemplar_at(self, q: float):
+        """Exemplar id nearest the empirical q-quantile's bucket.
+
+        Prefers the quantile bucket itself, then walks down (faster ops),
+        then up; returns None when no record carried an exemplar or the
+        quantile lands in the zero bucket.
+        """
+        if self.count == 0 or not self.exemplars:
+            return None
+        rank = max(1, math.ceil(q * self.count))
+        seen = self.zeros
+        if seen >= rank:
+            return None
+        idxs = sorted(self.buckets)
+        hit = idxs[-1]
+        for idx in idxs:
+            seen += self.buckets[idx]
+            if seen >= rank:
+                hit = idx
+                break
+        below = [i for i in idxs if i <= hit]
+        above = [i for i in idxs if i > hit]
+        for idx in list(reversed(below)) + above:
+            ex = self.exemplars.get(idx)
+            if ex is not None:
+                return ex
+        return None
+
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
     def state_dict(self):
-        return {
+        out = {
             "type": "hist",
             "count": self.count,
             "total": self.total,
@@ -142,6 +181,10 @@ class LogHist:
             "p95": self.quantile(0.95),
             "p99": self.quantile(0.99),
         }
+        if self.exemplars:
+            out["exemplars"] = {str(k): v for k, v
+                                in sorted(self.exemplars.items())}
+        return out
 
     @classmethod
     def from_state(cls, state: dict) -> "LogHist":
@@ -152,6 +195,8 @@ class LogHist:
         h.vmin = math.inf if state["min"] is None else state["min"]
         h.vmax = -math.inf if state["max"] is None else state["max"]
         h.buckets = {int(k): v for k, v in state["buckets"].items()}
+        h.exemplars = {int(k): v for k, v
+                       in state.get("exemplars", {}).items()}
         return h
 
 

@@ -1,4 +1,4 @@
-"""Observer hook surface wired through the core (DESIGN.md §11).
+"""Observer hook surface wired through the core (DESIGN.md §11, §13).
 
 ``Store``/``ShardedStore``/``FleetScheduler``/``ServeEngine`` call one
 hook object — ``EngineConfig.observer`` — at every instrumentation point.
@@ -9,8 +9,12 @@ byte-identical to un-instrumented ones (golden-locked in
 
 ``Observer`` is the real implementation: spans/instants go to a
 ``SpanTracer`` on the simulated lane clocks, scalar observations to a
-``MetricsRegistry`` (per-engine/per-shard labels), and periodic derived
-snapshots to a ``HealthSampler``.
+``MetricsRegistry`` (per-engine/per-shard labels), periodic derived
+snapshots to a ``HealthSampler``, and — §13 — every span doubles as a
+*cause frame*: spans carry parent/child links and a trace id
+(``causality.py``), and byte deltas between frame boundaries are charged
+to the innermost cause in the ``AmplificationLedger`` (``ledger.py``),
+which conserves byte-identically against the SimIO counters.
 
 No-op contract (enforced by the ``obs-purity`` scavlint pass): hook code
 may *read* store and SimIO state freely but must never advance a lane
@@ -23,7 +27,9 @@ from __future__ import annotations
 import contextlib
 import os
 
+from .causality import USER_OPS, Causality
 from .health import HealthSampler
+from .ledger import AmplificationLedger
 from .metrics import MetricsRegistry
 from .trace import DEFAULT_CAP, SpanTracer, dump_chrome_trace
 
@@ -36,7 +42,7 @@ _IO_FIELDS = ("read_bytes", "write_bytes", "read_ops", "write_ops")
 
 class NullObserver:
     """No-op observer: the default.  Every hook returns immediately; the
-    span hook hands back one shared, reusable null context manager."""
+    span and cause hooks hand back one shared, reusable null context."""
 
     enabled = False
 
@@ -52,6 +58,9 @@ class NullObserver:
     def lane_sync(self, store, lane, t0) -> None:
         pass
 
+    def cause(self, store, **fields):
+        return _NULL_CTX
+
     def on_op(self, store, name, value) -> None:
         pass
 
@@ -59,6 +68,12 @@ class NullObserver:
         pass
 
     def on_stall(self, store, us, kind) -> None:
+        pass
+
+    def on_space(self, store, event, nbytes) -> None:
+        pass
+
+    def on_edit(self, store, kind, nbytes) -> None:
         pass
 
     def tick(self, store) -> None:
@@ -74,9 +89,11 @@ class _Span:
     ``dur`` is the *lane-time* delta, so nested work on other lanes (a
     ``pump()`` inside a foreground op) never pollutes this track — the
     per-(shard, lane) tiling invariant (see ``trace.py``) depends on it.
-    """
+    On enter the span also becomes a causality frame (id/parent/trace) and
+    a ledger cause scope (§13)."""
 
-    __slots__ = ("obs", "store", "name", "lane", "args", "t0", "io0")
+    __slots__ = ("obs", "store", "name", "lane", "args", "t0", "io0",
+                 "frame")
 
     def __init__(self, obs, store, name, lane, args):
         self.obs = obs
@@ -89,6 +106,8 @@ class _Span:
         io = self.store.io
         self.t0 = io.lanes[self.lane]
         self.io0 = {f: dict(getattr(io, f)) for f in _IO_FIELDS}
+        self.frame = self.obs._begin_span(self.store, self.name, self.lane,
+                                          self.args)
         return self
 
     def __exit__(self, *exc):
@@ -102,12 +121,36 @@ class _Span:
             if d:
                 args[f] = d
         self.obs._end_span(self.store, self.name, self.lane, self.t0,
-                           t1 - self.t0, args or None)
+                           t1 - self.t0, args or None, self.frame)
+        return False
+
+
+class _Cause:
+    """Ledger-only cause scope (no span event): fine-grained attribution
+    inside a job frame — e.g. per-temperature vSST builds (§13)."""
+
+    __slots__ = ("obs", "store", "fields", "token")
+
+    def __init__(self, obs, store, fields):
+        self.obs = obs
+        self.store = store
+        self.fields = fields
+
+    def __enter__(self):
+        self.token = self.obs.ledger.push(
+            self.obs._label(self.store), self.store.io, self.fields,
+            pin="origin" in self.fields)
+        return self
+
+    def __exit__(self, *exc):
+        self.obs.ledger.pop(self.obs._label(self.store), self.store.io,
+                            self.token)
         return False
 
 
 class Observer(NullObserver):
-    """Tracing + metrics + health, recorded on the simulated clocks."""
+    """Tracing + metrics + health + causal ledger, on the simulated
+    clocks."""
 
     enabled = True
 
@@ -116,6 +159,8 @@ class Observer(NullObserver):
         self.tracer = SpanTracer(cap=cap)
         self.metrics = MetricsRegistry()
         self.health = health or HealthSampler(sample_every=sample_every)
+        self.ledger = AmplificationLedger()
+        self.causality = Causality()
         self._stores: dict[str, object] = {}
 
     # ------------------------------------------------------------- registry
@@ -123,6 +168,7 @@ class Observer(NullObserver):
         label = str(len(self._stores))
         self._stores[label] = store
         self.tracer.shard_meta[label] = {"engine": store.cfg.engine}
+        self.ledger.register(label, store.io)
         return label
 
     def _label(self, store) -> str:
@@ -135,13 +181,33 @@ class Observer(NullObserver):
     def span(self, store, name, lane="fg", **args):
         return _Span(self, store, name, lane, args)
 
-    def _end_span(self, store, name, lane, ts, dur, args) -> None:
-        self.tracer.span(name, lane, self._label(store), ts, dur, args)
-        self.metrics.hist(f"{name}_us", **self._labels(store)).record(dur)
+    def _begin_span(self, store, name, lane, args):
+        frame = self.causality.push()
+        self.causality.note_user_op(name)
+        overrides = {"op": name}
+        cause = args.get("cause") if args else None
+        if cause:
+            overrides.update(cause)
+        if name in USER_OPS:
+            overrides.setdefault("trigger", "user")
+        frame.label = self._label(store)
+        frame.token = self.ledger.push(frame.label, store.io, overrides,
+                                       global_origin=self.causality.origin)
+        return frame
+
+    def _end_span(self, store, name, lane, ts, dur, args, frame) -> None:
+        self.ledger.pop(frame.label, store.io, frame.token)
+        self.causality.pop(frame)
+        self.tracer.span(name, lane, self._label(store), ts, dur, args,
+                         span_id=frame.span_id, parent_id=frame.parent_id,
+                         trace_id=frame.trace_id)
+        self.metrics.hist(f"{name}_us", **self._labels(store)).record(
+            dur, exemplar=frame.trace_id)
 
     def instant(self, store, name, lane="fg", **args) -> None:
         self.tracer.instant(name, lane, self._label(store),
-                            store.io.lanes[lane], args or None)
+                            store.io.lanes[lane], args or None,
+                            trace_id=self.causality.current_trace())
 
     def lane_sync(self, store, lane, t0) -> None:
         """A scheduler jumped ``lane``'s clock from ``t0`` to its current
@@ -150,11 +216,17 @@ class Observer(NullObserver):
         t1 = store.io.lanes[lane]
         if t1 > t0:
             self.tracer.span("lane_sync", lane, self._label(store), t0,
-                             t1 - t0)
+                             t1 - t0,
+                             trace_id=self.causality.current_trace())
+
+    # ---------------------------------------------------------- cause scopes
+    def cause(self, store, **fields):
+        return _Cause(self, store, fields)
 
     # -------------------------------------------------------------- metrics
     def on_op(self, store, name, value) -> None:
-        self.metrics.hist(name, **self._labels(store)).record(value)
+        self.metrics.hist(name, **self._labels(store)).record(
+            value, exemplar=self.causality.current_trace() or None)
 
     def on_count(self, store, name, n=1) -> None:
         self.metrics.counter(name, **self._labels(store)).inc(n)
@@ -162,8 +234,16 @@ class Observer(NullObserver):
     def on_stall(self, store, us, kind) -> None:
         if us > 0:
             labels = self._labels(store)
-            self.metrics.hist("stall_us", **labels).record(us)
+            self.metrics.hist("stall_us", **labels).record(
+                us, exemplar=self.causality.current_trace() or None)
             self.metrics.counter("stalls", kind=kind, **labels).inc()
+
+    # --------------------------------------------------------------- ledger
+    def on_space(self, store, event, nbytes) -> None:
+        self.ledger.charge_space(self._label(store), event, nbytes)
+
+    def on_edit(self, store, kind, nbytes) -> None:
+        self.ledger.charge_edit(self._label(store), kind, nbytes)
 
     # --------------------------------------------------------------- health
     def tick(self, store) -> None:
@@ -171,15 +251,23 @@ class Observer(NullObserver):
 
     # ------------------------------------------------------------ reporting
     def finish(self) -> None:
-        """Record final per-shard lane clocks (the tiling reference) and a
-        last health sample for every registered store."""
+        """Record final per-shard lane clocks (the tiling reference), the
+        final SimIO counter snapshots (the ledger conservation reference),
+        and a last health sample for every registered store."""
         for label, store in self._stores.items():
             self.tracer.shard_lanes[label] = dict(store.io.lanes)
+            self.ledger.finish(label, store.io, meta={
+                "engine": store.cfg.engine,
+                "user_write_bytes": store.user_write_bytes,
+                "valid_bytes": store.valid_bytes,
+                "space_bytes": store.space_bytes(),
+            })
             self.health.sample(store, label)
 
     def dump(self, outdir, chrome: bool = True) -> dict:
-        """Write events.json / metrics.json / health.json (and trace.json,
-        the Chrome trace-event conversion) under ``outdir``."""
+        """Write events.json / metrics.json / health.json / ledger.json
+        (and trace.json, the Chrome trace-event conversion) under
+        ``outdir``."""
         self.finish()
         os.makedirs(outdir, exist_ok=True)
         paths = {}
@@ -189,6 +277,8 @@ class Observer(NullObserver):
         self.metrics.dump_json(paths["metrics"])
         paths["health"] = os.path.join(outdir, "health.json")
         self.health.dump_json(paths["health"])
+        paths["ledger"] = os.path.join(outdir, "ledger.json")
+        self.ledger.dump_json(paths["ledger"])
         if chrome:
             paths["trace"] = os.path.join(outdir, "trace.json")
             dump_chrome_trace(self.tracer, paths["trace"])

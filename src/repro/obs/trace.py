@@ -43,16 +43,26 @@ class SpanTracer:
             self.dropped += 1
         self.events.append(ev)
 
-    def span(self, name, lane, shard, ts, dur, args=None) -> None:
+    def span(self, name, lane, shard, ts, dur, args=None,
+             span_id=None, parent_id=None, trace_id=None) -> None:
         ev = {"name": name, "ph": "X", "lane": lane, "shard": str(shard),
               "ts": ts, "dur": dur}
+        if span_id:
+            ev["id"] = span_id
+        if parent_id:
+            ev["parent"] = parent_id
+        if trace_id:
+            ev["trace"] = trace_id
         if args:
             ev["args"] = args
         self.add(ev)
 
-    def instant(self, name, lane, shard, ts, args=None) -> None:
+    def instant(self, name, lane, shard, ts, args=None,
+                trace_id=None) -> None:
         ev = {"name": name, "ph": "i", "lane": lane, "shard": str(shard),
               "ts": ts}
+        if trace_id:
+            ev["trace"] = trace_id
         if args:
             ev["args"] = args
         self.add(ev)
@@ -127,7 +137,13 @@ def chrome_trace(tracer: SpanTracer) -> dict:
         else:
             ce["s"] = "t"          # instant scope: thread
         if "args" in ev:
-            ce["args"] = ev["args"]
+            ce["args"] = dict(ev["args"])
+        # span identity rides in args so Perfetto's query/search can find
+        # a LogHist exemplar's trace id (round-trip tested)
+        for src, dst in (("id", "span_id"), ("parent", "parent_id"),
+                         ("trace", "trace_id")):
+            if src in ev:
+                ce.setdefault("args", {})[dst] = ev[src]
         out.append(ce)
     return {
         "traceEvents": out,

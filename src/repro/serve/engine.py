@@ -156,7 +156,11 @@ class ServeEngine:
                 sizes = np.array([a[1] * _PAGE_META_BYTES
                                   for a in admitted], np.int64)
                 t0 = self.meta.io.fg_clock_us
-                self.meta.write(WriteBatch().puts(rids, sizes))
+                # pinned origin (§13): everything this metadata write
+                # triggers downstream — flushes, compactions, GC — blames
+                # the serving tier's admission path, not a generic "write"
+                with self.meta.obs.cause(self.meta, origin="admission"):
+                    self.meta.write(WriteBatch().puts(rids, sizes))
                 # admission-path observability (DESIGN.md §11): simulated
                 # foreground latency of the metadata write on the serving
                 # critical path, plus the admitted page mix

@@ -38,7 +38,7 @@ def test_registry_has_all_passes():
     names = set(all_passes())
     assert names == {"durability-coverage", "hook-purity", "io-accounting",
                      "vectorization", "kernel-parity", "config-discipline",
-                     "docs-citation", "obs-purity"}
+                     "docs-citation", "obs-purity", "attribution-coverage"}
 
 
 def test_finding_key_is_line_independent():
@@ -201,6 +201,83 @@ def test_obs_purity_suppression():
 def test_obs_purity_scope_is_obs_only():
     assert not in_scope("obs-purity", "src/repro/core/store.py")
     assert in_scope("obs-purity", "src/repro/obs/observer.py")
+
+
+# ---------------------------------------------- attribution-coverage (§13)
+BAD_RUNJOB = """
+def pump(store):
+    job = store.next_compact_job()
+    store.run_job(job, "bg")
+"""
+
+GOOD_RUNJOB = """
+def pump(store):
+    store.run_job(store.next_compact_job(), "bg", trigger="lane_budget")
+    store.run_job(store.next_gc_job(), "gc", "drain")
+"""
+
+BAD_EDIT = """
+def install(store, t):
+    store.version.add_value_file(t)
+    store._log_edit("add_value_file", fid=t.fid)
+"""
+
+GOOD_EDIT_SPACE = """
+def install(store, t):
+    store.version.add_value_file(t)
+    store._log_edit("add_value_file", fid=t.fid)
+    store.obs.on_space(store, "vsst_add", t.file_bytes)
+"""
+
+GOOD_EDIT_CAUSE = """
+def install(store, t):
+    with store.obs.cause(store, temp="cold"):
+        store.version.add_value_file(t)
+        store._log_edit("add_value_file", fid=t.fid)
+"""
+
+
+def test_attribution_flags_triggerless_run_job():
+    fs = check("attribution-coverage", BAD_RUNJOB, "src/repro/core/x.py")
+    assert len(fs) == 1 and "without an explicit trigger" in fs[0].message
+    assert fs[0].context == "pump"
+
+
+def test_attribution_accepts_trigger_kw_or_positional():
+    assert not check("attribution-coverage", GOOD_RUNJOB,
+                     "src/repro/core/x.py")
+
+
+def test_attribution_exempts_run_job_definition_itself():
+    text = "def run_job(self, job, lane):\n    self.run_job(job, lane)\n"
+    assert not check("attribution-coverage", text, "src/repro/core/x.py")
+
+
+def test_attribution_flags_unattributed_value_file_edit():
+    fs = check("attribution-coverage", BAD_EDIT, "src/repro/core/x.py")
+    assert len(fs) == 1 and "add_value_file" in fs[0].message
+    assert "attributing the space transition" in fs[0].message
+
+
+def test_attribution_accepts_on_space_or_cause_scope():
+    assert not check("attribution-coverage", GOOD_EDIT_SPACE,
+                     "src/repro/core/x.py")
+    assert not check("attribution-coverage", GOOD_EDIT_CAUSE,
+                     "src/repro/core/x.py")
+
+
+def test_attribution_suppression():
+    text = BAD_RUNJOB.replace(
+        "def pump(store):",
+        "def pump(store):  # scavlint: allow-attribution test pump")
+    assert not check("attribution-coverage", text, "src/repro/core/x.py")
+
+
+def test_attribution_scope_excludes_durability_replay():
+    assert not in_scope("attribution-coverage",
+                        "src/repro/core/durability/manifest.py")
+    assert not in_scope("attribution-coverage", "src/repro/obs/observer.py")
+    assert in_scope("attribution-coverage", "src/repro/core/gc.py")
 
 
 # ---------------------------------------------------------- io-accounting

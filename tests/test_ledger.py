@@ -1,0 +1,364 @@
+"""Amplification-ledger & causality tests (DESIGN.md §13).
+
+Five contracts:
+
+  * **Conservation** — per (shard, category) the cause cells sum
+    *byte-identically* (exact integer equality, no tolerance) to the
+    ``final − base`` SimIO counters, on every engine, on random
+    workloads (hypothesis), and on a quota-stressed fleet.
+  * **Golden parity** — attaching the ledger-bearing ``Observer``
+    changes nothing about the accounting (the PR-2 goldens hold with the
+    ledger enabled *and* it actually recorded cells — the tap is live,
+    not dormant).
+  * **Span well-formedness** — parent/child links form a forest: ids
+    are unique and increasing, every non-root parent exists, children
+    inherit the parent's trace id, roots start their own trace.
+  * **Exemplar round-trip** — a LogHist tail exemplar is a trace id
+    that resolves to real span events in the Chrome trace export.
+  * **CLI & gate** — ``obs blame`` emits blame.json and a per-cause
+    table; ``obs check`` flags a tampered ledger; the perf regression
+    gate passes stable trajectories and fails regressed ones.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_support import HealthCheck, given, settings, st
+from test_refactor_parity import GOLDENS, run_fixed_workload
+
+from repro.core import ENGINES, EngineConfig, ShardedStore, Store, WriteBatch
+from repro.obs import (Observer, blame_rows, cause_key, check_conservation,
+                       live_breakdown, parse_cause)
+from repro.obs.cli import main as obs_main
+from repro.obs.trace import chrome_trace
+
+N_KEYS = 2048
+VSIZES = np.array([64, 200, 600, 2000, 9000], np.int64)
+
+
+def _drive(store, groups: int = 12, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    for _ in range(groups):
+        keys = rng.integers(0, N_KEYS, 128).astype(np.uint64)
+        sizes = VSIZES[rng.integers(0, len(VSIZES), 128)]
+        store.write(WriteBatch().puts(keys, sizes))
+        store.write(WriteBatch().deletes(
+            rng.integers(0, N_KEYS, 8).astype(np.uint64)))
+        store.multi_get(rng.integers(0, N_KEYS, 48).astype(np.uint64))
+        store.multi_scan(rng.integers(0, N_KEYS, 4).astype(np.int64), 8)
+    store.drain()
+
+
+def _observed_state(engine: str, groups: int = 12, seed: int = 0,
+                    **cfg_kw) -> tuple[Observer, dict]:
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled(engine, 8 << 20, est_keys=N_KEYS,
+                              observer=obs, **cfg_kw)
+    _drive(Store(cfg), groups=groups, seed=seed)
+    obs.finish()
+    return obs, obs.ledger.state_dict()
+
+
+def _cause_keys(state: dict) -> set[str]:
+    return {k for sh in state["shards"].values() for k in sh["cells"]}
+
+
+# =========================================================== conservation
+@pytest.mark.parametrize("engine", ENGINES)
+def test_conservation_on_all_engines(engine):
+    """Every byte the SimIO counted is in exactly one cause cell — exact
+    integer equality per (shard, category), on all seven engines."""
+    obs, state = _observed_state(engine)
+    assert check_conservation(state) == []
+    keys = _cause_keys(state)
+    assert any("op=write" in k and "trigger=user" in k for k in keys)
+    # background work was attributed, not just the user op
+    assert any("trigger=lane_budget" in k for k in keys)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.sampled_from(ENGINES), st.integers(2, 8), st.integers(0, 1000))
+def test_conservation_random_workloads(engine, groups, seed):
+    """Property: conservation is workload-independent — random group
+    counts and seeds never produce an unattributed or double-counted
+    byte on any engine."""
+    _, state = _observed_state(engine, groups=groups, seed=seed)
+    assert check_conservation(state) == []
+
+
+@pytest.mark.parametrize("quota", [None, 1 << 20])
+def test_conservation_on_quota_stressed_fleet(quota):
+    """Fleet-scheduled shards conserve per shard; the hard-quota path
+    shows up as a distinct ``trigger=quota_stall`` cause."""
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs, space_quota_bytes=quota)
+    fleet = ShardedStore(cfg, n_shards=3, shard_policy="range",
+                         key_space=N_KEYS)
+    rng = np.random.default_rng(0)
+    for _ in range(10):         # write-heavy: keeps space above the quota
+        keys = rng.integers(0, N_KEYS, 128).astype(np.uint64)
+        fleet.write(WriteBatch().puts(
+            keys, VSIZES[rng.integers(0, len(VSIZES), 128)]))
+        fleet.multi_get(rng.integers(0, N_KEYS, 48).astype(np.uint64))
+    fleet.drain()
+    obs.finish()
+    state = obs.ledger.state_dict()
+    assert len(state["shards"]) == 3
+    assert check_conservation(state) == []
+    if quota is not None:
+        assert any("trigger=quota_stall" in k for k in _cause_keys(state))
+
+
+def test_pick_taxonomy_present():
+    """Policy decisions materialize as ``pick=`` facets: flushes carry
+    memtable_rotation; compaction carries the compensated-size pick on a
+    compensating engine; GC carries garbage_ratio."""
+    _, state = _observed_state("scavenger", groups=20)
+    picks = {parse_cause(k).get("pick") for k in _cause_keys(state)}
+    assert {"memtable_rotation", "compensated_size",
+            "garbage_ratio"} <= picks
+
+
+def test_pinned_origin_scope():
+    """A cause scope with an explicit origin (the serving tier's
+    admission writes) pins it: the user-op span does not override it."""
+    obs = Observer()
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs)
+    store = Store(cfg)
+    with obs.cause(store, origin="admission"):
+        store.write(WriteBatch().puts(
+            np.arange(64, dtype=np.uint64),
+            np.full(64, 512, np.int64)))
+    store.drain()
+    obs.finish()
+    state = obs.ledger.state_dict()
+    assert check_conservation(state) == []
+    assert any(parse_cause(k).get("origin") == "admission"
+               for k in _cause_keys(state))
+
+
+def test_cause_key_round_trip():
+    cause = {"origin": "write", "op": "gc", "trigger": "lane_budget",
+             "pick": "garbage_ratio"}
+    assert parse_cause(cause_key(cause)) == cause
+
+
+def test_live_breakdown_matches_ledger():
+    """The fig05 live view (write bytes by op/pick) sums to the same
+    totals as the raw cells, without finish()."""
+    obs = Observer(sample_every=16)
+    cfg = EngineConfig.scaled("scavenger", 8 << 20, est_keys=N_KEYS,
+                              observer=obs)
+    store = Store(cfg)
+    _drive(store, groups=8)
+    view = live_breakdown(obs, store)
+    assert view["write_bytes_by_op"].get("write", 0) > 0
+    assert view["write_bytes_by_pick"].get("memtable_rotation", 0) > 0
+    obs.finish()
+    state = obs.ledger.state_dict()
+    total = sum(sum(c.get("write_bytes", {}).values())
+                for sh in state["shards"].values()
+                for c in sh["cells"].values())
+    assert sum(view["write_bytes_by_op"].values()) == total
+
+
+# ========================================================== golden parity
+@pytest.mark.parametrize("engine", sorted(GOLDENS))
+def test_golden_parity_with_live_ledger(engine):
+    """The PR-2 goldens hold with the ledger-bearing observer attached,
+    and the ledger demonstrably recorded (non-empty cells + exact
+    conservation): attribution is free, byte-wise."""
+    obs = Observer(sample_every=16)
+    got = run_fixed_workload(engine, observer=obs)
+    for field, val in GOLDENS[engine].items():
+        assert got[field] == pytest.approx(val, rel=0, abs=0), field
+    obs.finish()
+    state = obs.ledger.state_dict()
+    assert _cause_keys(state), "ledger recorded nothing"
+    assert check_conservation(state) == []
+
+
+# ==================================================== span well-formedness
+def test_spans_form_a_well_linked_forest():
+    """Ids unique & increasing; every non-root parent is a recorded span
+    with a smaller id (acyclic by construction); children inherit the
+    parent's trace; roots start their own trace (trace == id)."""
+    obs, _ = _observed_state("scavenger_adaptive")
+    spans = [ev for ev in obs.tracer.events
+             if ev["ph"] == "X" and "id" in ev]
+    assert spans
+    by_id = {ev["id"]: ev for ev in spans}
+    assert len(by_id) == len(spans), "duplicate span ids"
+    for ev in spans:
+        parent = ev.get("parent", 0)
+        if parent:
+            assert parent in by_id, f"orphan span {ev['id']}"
+            assert parent < ev["id"]
+            assert ev["trace"] == by_id[parent]["trace"]
+        else:
+            assert ev["trace"] == ev["id"]
+
+
+def test_stalled_write_has_background_children():
+    """The payoff of request-scoped tracing: a background job force-run
+    inside a stalled user op is a *child* of that op's span."""
+    obs, _ = _observed_state("scavenger", groups=20)
+    spans = [ev for ev in obs.tracer.events
+             if ev["ph"] == "X" and "id" in ev]
+    by_id = {ev["id"]: ev for ev in spans}
+    bg_children = [ev for ev in spans
+                   if ev["lane"] in ("bg", "gc") and ev.get("parent")
+                   and by_id[ev["parent"]]["name"] in
+                   ("write", "multi_get", "multi_scan")]
+    assert bg_children, "no background job nested under a user op"
+
+
+# ===================================================== exemplar round-trip
+def test_exemplar_round_trips_through_chrome_trace():
+    """A p99 exemplar from the latency histogram is a trace id that
+    resolves to at least one span in the Chrome export, and that trace's
+    events include the op class the histogram measured."""
+    obs, _ = _observed_state("scavenger")
+    for metric, opname in (("write_us", "write"),
+                           ("multi_get_us", "multi_get")):
+        h = obs.metrics.merged(metric)
+        ex = h.exemplar_at(0.99)
+        assert ex, f"{metric} kept no tail exemplar"
+        evs = [e for e in chrome_trace(obs.tracer)["traceEvents"]
+               if e.get("args", {}).get("trace_id") == ex]
+        assert evs, f"exemplar {ex} not in chrome trace"
+        assert any(e["name"] == opname for e in evs)
+
+
+def test_exemplar_survives_dump_reload(tmp_path):
+    from repro.obs import LogHist
+    obs, _ = _observed_state("scavenger", groups=6)
+    paths = obs.dump(tmp_path / "d")
+    state = json.loads(open(paths["metrics"]).read())
+    h = LogHist()
+    for entry in state["write_us"]:
+        h.merge(LogHist.from_state(entry))
+    assert h.exemplar_at(0.99) == obs.metrics.merged(
+        "write_us").exemplar_at(0.99)
+
+
+# ================================================================ CLI
+def test_cli_blame_emits_table_and_json(tmp_path, capsys):
+    obs, _ = _observed_state("scavenger")
+    obs.dump(tmp_path / "run")
+    assert obs_main(["blame", str(tmp_path / "run")]) == 0
+    out = capsys.readouterr().out
+    assert "conservation: OK" in out
+    assert "write<-write [user]" in out
+    blame = json.loads((tmp_path / "run" / "blame.json").read_text())
+    assert blame["conservation_failures"] == []
+    assert blame["rows"] == blame_rows(json.loads(
+        (tmp_path / "run" / "ledger.json").read_text()))
+    wa = {r["op"]: r["wa"] for r in blame["rows"]}
+    assert all(v >= 0.0 for v in wa.values())
+
+
+def test_cli_blame_missing_ledger_fails(tmp_path, capsys):
+    d = tmp_path / "empty"
+    d.mkdir()
+    (d / "metrics.json").write_text("{}")
+    assert obs_main(["blame", str(d)]) == 1
+    assert "no ledger.json" in capsys.readouterr().out
+
+
+def test_cli_check_flags_tampered_ledger(tmp_path, capsys):
+    """Corrupting one cell breaks exact conservation -> check fails."""
+    obs, _ = _observed_state("scavenger", groups=6)
+    obs.dump(tmp_path / "run")
+    lpath = tmp_path / "run" / "ledger.json"
+    state = json.loads(lpath.read_text())
+    sh = next(iter(state["shards"].values()))
+    for cell in sh["cells"].values():
+        if cell.get("write_bytes"):
+            cat = next(iter(cell["write_bytes"]))
+            cell["write_bytes"][cat] += 1          # one stolen byte
+            break
+    lpath.write_text(json.dumps(state))
+    assert obs_main(["check", str(tmp_path / "run")]) == 1
+    out = capsys.readouterr().out
+    assert "conservation" in out and "FAIL" in out
+    capsys.readouterr()
+    assert obs_main(["blame", str(tmp_path / "run")]) == 1
+    assert "conservation: FAIL" in capsys.readouterr().out
+
+
+def test_cli_dashboard_shows_cause_bars_and_exemplars(tmp_path, capsys):
+    obs, _ = _observed_state("scavenger")
+    obs.dump(tmp_path / "run")
+    assert obs_main(["dashboard", str(tmp_path / "run")]) == 0
+    out = capsys.readouterr().out
+    assert "write bytes by cause:" in out
+    assert "tail exemplars" in out and "trace" in out
+
+
+# ======================================================== perf gate unit
+def _traj(rows_list, section="bench", scale="quick"):
+    return [{"section": section, "scale": scale, "rows": rows}
+            for rows in rows_list]
+
+
+def _run_gate(tmp_path, entries, tol=0.5, window=5):
+    from benchmarks.perf_report import gate
+    p = tmp_path / "BENCH_t.json"
+    p.write_text(json.dumps(entries))
+    buf = io.StringIO()
+    n = gate(tol=tol, window=window, files=(str(p),), out=buf)
+    return n, buf.getvalue()
+
+
+def test_gate_passes_stable_trajectory(tmp_path):
+    rows = [{"name": "op", "us_per_call": 10.0}]
+    n, out = _run_gate(tmp_path, _traj([rows, rows, rows]))
+    assert n == 0 and "0 regressed" in out
+
+
+def test_gate_fails_regression_and_respects_tol(tmp_path):
+    entries = _traj([[{"name": "op", "us_per_call": 10.0}],
+                     [{"name": "op", "us_per_call": 10.0}],
+                     [{"name": "op", "us_per_call": 30.0}]])
+    n, out = _run_gate(tmp_path, entries, tol=0.5)
+    assert n == 1 and "GATE FAIL" in out and "op us_per_call" in out
+    n, _ = _run_gate(tmp_path, entries, tol=5.0)
+    assert n == 0
+
+
+def test_gate_needs_history_and_skips_untracked_rows(tmp_path):
+    # single entry: nothing to compare against
+    n, out = _run_gate(tmp_path, _traj([[{"name": "op",
+                                          "us_per_call": 99.0}]]))
+    assert n == 0 and "0 metrics checked" in out
+    # analytic rows (no tracked shape) are ignored even when they grow
+    entries = _traj([[{"cell": "c", "baseline": 1.0}],
+                     [{"cell": "c", "baseline": 9.0}]])
+    n, out = _run_gate(tmp_path, entries)
+    assert n == 0 and "0 metrics checked" in out
+
+
+def test_gate_tracks_p99_and_space_amp_shapes(tmp_path):
+    entries = _traj([
+        [{"engine": "e", "metric": "m", "p99": 5.0},
+         {"engine": "e", "workload": "w", "us_per_update": 2.0,
+          "space_amp": 1.5}],
+        [{"engine": "e", "metric": "m", "p99": 5.0},
+         {"engine": "e", "workload": "w", "us_per_update": 2.0,
+          "space_amp": 1.5}],
+        [{"engine": "e", "metric": "m", "p99": 50.0},
+         {"engine": "e", "workload": "w", "us_per_update": 2.0,
+          "space_amp": 9.0}],
+    ])
+    n, out = _run_gate(tmp_path, entries, tol=0.5)
+    assert n == 2
+    assert "e/m p99" in out and "e/w space_amp" in out
