@@ -20,7 +20,7 @@ analyze:
 bench-smoke:
 	REPRO_BENCH_SCALE=quick $(PY) -m benchmarks.run \
 		--trace=trace_out batch_api read_path \
-		sharding adaptive_gc recovery fig02_tradeoff \
+		sharding adaptive_gc recovery elasticity fig02_tradeoff \
 		fig05_spaceamp_sources kernels_bench
 	$(PY) -m repro.obs check trace_out
 	$(PY) -m benchmarks.perf_report --gate

@@ -1,0 +1,136 @@
+"""Elasticity benchmark: hot-shard auto-split under a hotspot workload
+(DESIGN.md §14).
+
+A 2-shard range fleet runs the standard load + update procedure with a
+*static* contiguous hotspot (``HotspotKeys`` pinned to one phase): 90% of
+updates hammer one shard's slice.  Two runs per engine over the identical
+op stream:
+
+  * ``static``  — elasticity off: the hot shard soaks up the traffic and
+    its space share stays pinned near the hotspot's weight.
+  * ``elastic`` — the elasticity manager watches per-shard space/traffic
+    shares and splits the hot shard online (checkpoint-copy, re-route,
+    delta-replay); the row reports migration count, migrated MB, the
+    total write-fence downtime (``fence_ms`` — the only window where
+    writes to a moving range block), and the max per-shard space share
+    before/after.
+
+The headline contract: splits reduce the hottest shard's share of fleet
+space with *bounded* fence downtime (asserted < 1% of update time), and
+``fence_ms`` is gated against the trajectory history by
+``benchmarks.perf_report --gate`` so migration downtime regressions fail
+the build.  Rows append to the repo-root ``BENCH_fleet.json``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import EngineConfig, ShardedStore
+from repro.workloads import HotspotKeys, Runner, pareto_1k
+
+from .common import (batch_size, ds_bytes, persist_trajectory, row,
+                     scale_name, trace_observer, trajectory_path)
+
+TRAJECTORY = "BENCH_fleet.json"
+N_FLEET = 2
+SPLIT_FRAC = 0.55       # split when a shard holds > 55% of space/traffic
+COOLDOWN_OPS = 2048
+MAX_SHARDS = 4
+HOT_FRAC = 0.9
+FENCE_BUDGET = 0.01     # fence downtime must stay < 1% of update time
+
+
+def _max_share(fleet) -> float:
+    space = [s.version.total_bytes() for s in fleet.shards]
+    tot = sum(space)
+    return max(space) / tot if tot else 0.0
+
+
+def _hot_seed(n_keys: int) -> int:
+    """Smallest HotspotKeys seed whose (hashed) hot-set position lands
+    entirely inside one of the two initial shard slices — the benchmark
+    needs the hotspot to make exactly one shard hot, not straddle the
+    boundary and heat both."""
+    half = n_keys // N_FLEET
+    for seed in range(64):
+        probe = HotspotKeys(n_keys, hot_n=max(1, n_keys // 8),
+                            hot_frac=1.0, shift_every=1 << 30, seed=seed)
+        ks = probe.sample(np.random.default_rng(0), 512)
+        if ks.max() < half or ks.min() >= half:
+            return seed
+    return 0
+
+
+def _one(engine: str, elastic: bool) -> dict:
+    spec = pareto_1k(ds_bytes(8))
+    knobs = dict(elastic_split_frac=SPLIT_FRAC,
+                 elastic_cooldown_ops=COOLDOWN_OPS,
+                 elastic_max_shards=MAX_SHARDS) if elastic else {}
+    cfg = EngineConfig.scaled(engine, spec.dataset_bytes // N_FLEET,
+                              est_keys=max(64, spec.n_keys // N_FLEET),
+                              observer=trace_observer(), **knobs)
+    fleet = ShardedStore(cfg, n_shards=N_FLEET, shard_policy="range",
+                         key_space=spec.n_keys)
+    # static hotspot (shift_every past the op count): 90% of updates hit
+    # one contiguous eighth of the keyspace — one shard's slice
+    hot = HotspotKeys(spec.n_keys, hot_n=max(1, spec.n_keys // 8),
+                      hot_frac=HOT_FRAC, shift_every=1 << 30,
+                      seed=_hot_seed(spec.n_keys))
+    r = Runner(fleet, spec, batch=batch_size(), key_gen=hot)
+    r.load()
+    share_loaded = _max_share(fleet)
+    up = r.update()
+    fleet.drain()
+    st = fleet.stats()
+    errors = r.check_reads(
+        np.arange(0, spec.n_keys, max(1, spec.n_keys // 512)))
+    assert errors == 0, f"{engine} fleet lost reads after elasticity"
+    fence_us = sum(m["fence_us"] for m in fleet.migrations)
+    return {
+        "us_per_update": up["sim_s"] * 1e6 / up["ops"],
+        "update_us": up["sim_s"] * 1e6,
+        "share_loaded": share_loaded,
+        "share_final": _max_share(fleet),
+        "n_shards": len(fleet.shards),
+        "n_migrations": st["n_migrations"],
+        "fence_ms": fence_us / 1e3,
+        "migrated_mb": fleet.migrated_bytes() / 2**20,
+        "space_amp": st["space_amp"],
+    }
+
+
+def run(scale: str | None = None) -> list[dict]:
+    engines = ("scavenger",) if scale_name() == "quick" \
+        else ("scavenger", "titan", "scavenger_adaptive")
+    rows = []
+    for engine in engines:
+        static = _one(engine, elastic=False)
+        m = _one(engine, elastic=True)
+        assert m["n_migrations"] >= 1, \
+            f"{engine}: hotspot never triggered a split"
+        assert m["share_final"] < static["share_final"], \
+            f"{engine}: split did not reduce the hot shard's space share"
+        assert m["fence_ms"] * 1e3 <= FENCE_BUDGET * m["update_us"], \
+            f"{engine}: fence downtime {m['fence_ms']:.3f}ms exceeds " \
+            f"{FENCE_BUDGET:.0%} of update time"
+        rows.append(row(
+            f"elasticity/{engine}/static", static["us_per_update"],
+            share_final=static["share_final"],
+            n_shards=static["n_shards"], space_amp=static["space_amp"]))
+        er = row(
+            f"elasticity/{engine}/elastic", m["us_per_update"],
+            share_loaded=m["share_loaded"], share_final=m["share_final"],
+            n_shards=m["n_shards"], n_migrations=m["n_migrations"],
+            fence_ms=m["fence_ms"], migrated_mb=m["migrated_mb"],
+            space_amp=m["space_amp"])
+        # top-level copy of the downtime metric: the perf gate only reads
+        # typed row keys, not the derived string (perf_report._row_metrics)
+        er["fence_ms"] = round(m["fence_ms"], 3)
+        rows.append(er)
+    persist_trajectory("fleet", rows,
+                       path=os.environ.get("REPRO_BENCH_TRAJECTORY",
+                                           trajectory_path(TRAJECTORY)))
+    return rows

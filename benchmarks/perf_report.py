@@ -31,7 +31,7 @@ from .common import persist_trajectory, trajectory_path
 OBS_TRAJECTORY = "BENCH_obs.json"
 # trajectory files the regression gate watches
 GATE_FILES = ("BENCH_adaptive.json", "BENCH_obs.json", "BENCH_kernels.json",
-              "BENCH_recovery.json")
+              "BENCH_recovery.json", "BENCH_fleet.json")
 # Default tolerance: trajectory history spans machines (BENCH files are
 # committed), so wall-clock metrics need 2x headroom; tighten with
 # --gate-tol when gating same-machine runs.
@@ -112,7 +112,12 @@ def _row_metrics(row: dict):
     shapes the gate does not track (e.g. perf_report's analytic cells,
     whose baseline/optimized terms are model outputs, not measurements)."""
     if "name" in row and "us_per_call" in row:
-        return row["name"], {"us_per_call": row["us_per_call"]}
+        out = {"us_per_call": row["us_per_call"]}
+        # fleet rows (benchmarks/elasticity.py) expose migration fence
+        # downtime as a typed key so regressions fail the gate (§14)
+        if isinstance(row.get("fence_ms"), (int, float)):
+            out["fence_ms"] = row["fence_ms"]
+        return row["name"], out
     if "engine" in row and "metric" in row and "p99" in row:
         return f"{row['engine']}/{row['metric']}", {"p99": row["p99"]}
     if "engine" in row and "us_per_update" in row:

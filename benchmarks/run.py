@@ -18,7 +18,7 @@ MODULES = [
     "fig12_micro", "fig13_ycsb", "fig14_nolimit", "fig16_features",
     "fig17_ablation_space", "fig19_workloads", "fig20_space_limits",
     "table1_space_overhead", "batch_api", "read_path", "sharding",
-    "adaptive_gc", "recovery", "kernels_bench",
+    "adaptive_gc", "recovery", "elasticity", "kernels_bench",
     "serving_cache", "checkpoint_store", "roofline",
 ]
 

@@ -44,9 +44,13 @@ __all__ = ["CrashPoint", "Durability", "EDIT_KINDS", "ManifestWriter",
            "read_record", "read_manifest", "read_wal", "recover_store",
            "replay_into", "scan_records", "snapshot", "unpack_array"]
 
-# Crash-injection points instrumented in the core (Store._crashpoint).
+# Crash-injection points instrumented in the core (Store._crashpoint);
+# the last four fire in the elastic-fleet migration/failover machinery
+# (ShardedStore._crashpoint, DESIGN.md §14).
 CRASH_POINTS = ("after_wal", "mid_flush", "mid_compaction",
-                "gc_pre_chain", "gc_post_chain")
+                "gc_pre_chain", "gc_post_chain",
+                "mid_migration_copy", "pre_reroute", "mid_delta_replay",
+                "pre_promote")
 
 
 class CrashPoint(RuntimeError):
@@ -135,6 +139,10 @@ class Durability:
                   vsizes) -> None:
         if self._wal is not None:
             self._wal.append_batch(idx, seq_base, kinds, keys, vsizes)
+
+    def log_ingest(self, idx: int, kinds, keys, vids, vsizes) -> None:
+        if self._wal is not None:
+            self._wal.append_ingest(idx, kinds, keys, vids, vsizes)
 
     def log_reads(self, idx: int, keys) -> None:
         if self._wal is not None:

@@ -37,6 +37,9 @@ EDIT_KINDS = (
     "retire_value_file",   # vSST left the registry: {fid}
     "chain_update",        # GC inheritance: {retired: [...], group: [...]}
     "fleet_checkpoint",    # ShardedStore checkpoint: scheduler state + epoch
+    "migration_begin",     # shard split/merge started: {kind, src, dst, ...}
+    "migration_end",       # migration finalized: {kind, src, dst, epoch, ...}
+    "replica_promote",     # failover: {shard, replica, applied}
 )
 
 

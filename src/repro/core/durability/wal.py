@@ -35,6 +35,8 @@ from .records import (append_record, pack_array, scan_records,
 _IDX_HDR = struct.Struct("<Q")          # op index
 _SEQ_HDR = struct.Struct("<Q")          # seq_base (write batches only)
 _BATCH_ARRAYS = 3                       # "b" payload: kinds, keys, vsizes
+_INGEST_ARRAYS = 4                      # "i" payload: kinds, keys, vids,
+#                                         vsizes
 
 
 def _encode_arrays(*arrays) -> bytes:
@@ -68,6 +70,14 @@ class WalWriter:
             np.asarray(kinds, np.uint8), np.asarray(keys, np.uint64),
             np.asarray(vsizes, np.int64)))
 
+    def append_ingest(self, idx: int, kinds, keys, vids, vsizes) -> None:
+        """Journal a vid-preserving ingest (migration copy-in / replica
+        promotion replay, DESIGN.md §14): records that already own their
+        value identity, so replay must not re-mint vids."""
+        self._append("i", idx, _encode_arrays(
+            np.asarray(kinds, np.uint8), np.asarray(keys, np.uint64),
+            np.asarray(vids, np.uint64), np.asarray(vsizes, np.int64)))
+
     def append_reads(self, idx: int, keys) -> None:
         self._append("r", idx, _encode_arrays(np.asarray(keys, np.uint64)))
 
@@ -88,8 +98,9 @@ def read_wal(path: Path | str) -> list[tuple]:
     """All intact journal records, in order.
 
     Each entry is ``(kind, idx, *payload)``: ``("b", idx, seq_base, kinds,
-    keys, vsizes)``, ``("r", idx, keys)``, ``("s", idx, starts, counts)``,
-    or ``("f", idx)``."""
+    keys, vsizes)``, ``("i", idx, kinds, keys, vids, vsizes)``,
+    ``("r", idx, keys)``, ``("s", idx, starts, counts)``, or
+    ``("f", idx)``."""
     out = []
     for _, key, payload in scan_records(path):
         kind = key.decode()
@@ -100,6 +111,9 @@ def read_wal(path: Path | str) -> list[tuple]:
             arrays = _decode_arrays(payload, off + _SEQ_HDR.size,
                                     _BATCH_ARRAYS)
             out.append(("b", idx, seq_base, *arrays))
+        elif kind == "i":
+            out.append(("i", idx, *_decode_arrays(payload, off,
+                                                  _INGEST_ARRAYS)))
         elif kind == "r":
             out.append(("r", idx, *_decode_arrays(payload, off, 1)))
         elif kind == "s":
@@ -121,6 +135,8 @@ def replay_into(store, records) -> int:
             continue
         if kind == "b":
             store._write_arrays(rec[3], rec[4], rec[5])
+        elif kind == "i":
+            store.ingest_batch(rec[2], rec[3], rec[4], rec[5])
         elif kind == "r":
             store.multi_get(rec[2])
         elif kind == "s":

@@ -118,6 +118,21 @@ class EngineConfig:
     kernel_min_batch: int = 128             # below this, stay on the host
     coalesce_window: int | None = None      # max records per coalesced run
 
+    # ---- elastic fleet: live split/merge + replication (§14) ----
+    # All off by default: a fleet with elasticity off is byte-identical to
+    # the static ShardedStore (golden-locked in tests/test_sharding.py).
+    elastic_split_frac: float | None = None  # split when a shard's space or
+    #                                          traffic share exceeds this
+    elastic_merge_frac: float = 0.0          # merge a shard whose share
+    #                                          fell below this (0 = never)
+    elastic_max_shards: int = 8              # split ceiling
+    elastic_cooldown_ops: int = 1024         # fleet user ops between
+    #                                          trigger evaluations
+    migration_chunk_records: int = 512       # records copied per pump step
+    replica_count: int = 0                   # N-way replication per shard
+    replica_lag_ops: int = 32                # applied-op lag per replica
+    #                                          rank (replica 0 is synchronous)
+
     # ---- observability (repro.obs, DESIGN.md §11) ----
     # Hook object receiving spans/metrics/health ticks from the core; None
     # resolves to the no-op NullObserver (observability-off runs are
@@ -152,6 +167,7 @@ class EngineConfig:
                 f"adaptive_enabled=True (use engine='scavenger_adaptive')")
         self._validate_adaptive()
         self._validate_kernels()
+        self._validate_elastic()
 
     def _validate_adaptive(self):
         """Bounds for the adaptive-tracker knobs (always checked: the
@@ -185,6 +201,35 @@ class EngineConfig:
         if self.coalesce_window is not None and self.coalesce_window < 1:
             raise ValueError("coalesce_window must be None or >= 1, got "
                              f"{self.coalesce_window}")
+
+    def _validate_elastic(self):
+        """Bounds for the elastic-fleet knobs (sharding/migrate.py, §14)."""
+        if self.elastic_split_frac is not None \
+                and not 0.0 < self.elastic_split_frac <= 1.0:
+            raise ValueError("elastic_split_frac must be None or in (0, 1], "
+                             f"got {self.elastic_split_frac}")
+        if not 0.0 <= self.elastic_merge_frac < 1.0:
+            raise ValueError("elastic_merge_frac must be in [0, 1), got "
+                             f"{self.elastic_merge_frac}")
+        if self.elastic_split_frac is not None \
+                and self.elastic_merge_frac >= self.elastic_split_frac:
+            raise ValueError(
+                "elastic_merge_frac must be < elastic_split_frac (a shard "
+                "eligible for both would split/merge forever), got "
+                f"{self.elastic_merge_frac} / {self.elastic_split_frac}")
+        if self.elastic_max_shards < 1:
+            raise ValueError("elastic_max_shards must be >= 1, got "
+                             f"{self.elastic_max_shards}")
+        for field in ("elastic_cooldown_ops", "migration_chunk_records"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1, got "
+                                 f"{getattr(self, field)}")
+        if self.replica_count < 0:
+            raise ValueError("replica_count must be >= 0, got "
+                             f"{self.replica_count}")
+        if self.replica_lag_ops < 0:
+            raise ValueError("replica_lag_ops must be >= 0, got "
+                             f"{self.replica_lag_ops}")
 
     # -------------------------------------------------------- serialization
     def state_dict(self) -> dict:

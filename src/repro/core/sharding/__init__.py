@@ -1,15 +1,27 @@
-"""Sharding subsystem: ShardedStore + fleet-level GC/compaction scheduler.
+"""Sharding subsystem: ShardedStore + fleet-level GC/compaction scheduler
++ live elasticity.
 
 ``ShardedStore`` partitions the keyspace across N independent ``Store``
 shards (hash or range routing) behind the same batched columnar API, and
 replaces per-shard ``pump()`` with a ``FleetScheduler`` that ranks GC jobs
 by garbage ratio and compaction jobs by compensated-size score across the
 whole fleet, under shared I/O-lane and space budgets.  See DESIGN.md §6.
+
+Elasticity (DESIGN.md §14): routers are slice tables supporting online
+split/merge with epoch-stamped re-dispatch (``router.py``), migrations run
+checkpoint-copy → re-route → delta-replay (``migrate.py``), and each
+primary journals its op stream to N replica Stores so ``fail_primary``
+can promote the most-caught-up one (``replica.py``).
 """
 
 from .fleet import SCHEDULERS, FleetScheduler
-from .router import POLICIES, HashRouter, RangeRouter, make_router, scatter
+from .migrate import ElasticityManager, Migration
+from .replica import ShardReplicator
+from .router import (POLICIES, HashRouter, RangeRouter, SliceRouter,
+                     make_router, restore_router, scatter)
 from .store import ShardedStore
 
 __all__ = ["ShardedStore", "FleetScheduler", "SCHEDULERS", "POLICIES",
-           "HashRouter", "RangeRouter", "make_router", "scatter"]
+           "HashRouter", "RangeRouter", "SliceRouter", "make_router",
+           "restore_router", "scatter", "ElasticityManager", "Migration",
+           "ShardReplicator"]

@@ -83,6 +83,25 @@ class FleetScheduler:
         self._rr_compact = int(st["rr_compact"])
         self._rr_gc = int(st["rr_gc"])
 
+    # ------------------------------------------------------------ topology
+    def add_shard(self, shard) -> None:
+        """Attach a freshly spawned shard (split destination) to fleet
+        scheduling (DESIGN.md §14)."""
+        self.shards.append(shard)
+        self.compact_wait.append(0)
+        self.gc_wait.append(0)
+        shard.scheduler = self
+
+    def remove_shard(self, pos: int) -> None:
+        """Detach a retired shard (merge victim) from fleet scheduling;
+        positions above ``pos`` shift down (DESIGN.md §14)."""
+        self.shards.pop(pos)
+        self.compact_wait.pop(pos)
+        self.gc_wait.pop(pos)
+        n = max(1, len(self.shards))
+        self._rr_compact %= n
+        self._rr_gc %= n
+
     # ------------------------------------------------------------- budgets
     def total_fg_us(self) -> float:
         return sum(s.io.lanes["fg"] for s in self.shards)

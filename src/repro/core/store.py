@@ -189,6 +189,76 @@ class Store(ScalarOps):
         self.obs.tick(self)
         return vids_out
 
+    def ingest_batch(self, kinds: np.ndarray, keys: np.ndarray,
+                     vids: np.ndarray, vsizes: np.ndarray) -> None:
+        """Apply records that already own their value identity: shard
+        migration copy-in, migration delta replay, and replica-log replay
+        (DESIGN.md §14).
+
+        Same simulated device costs and memtable path as ``write`` — one
+        group-committed WAL append, chunked insertion, write-pressure
+        stalls — and fresh sequence numbers, but the given ``vids`` are
+        preserved (the fleet promises reads return the vid the original
+        ``write`` minted, wherever the key now lives) and nothing is
+        counted as a *user* write (``user_write_bytes`` feeds write-amp
+        denominators; migrated bytes are amplification, not ingest)."""
+        cfg = self.cfg
+        kinds = np.asarray(kinds, np.uint8)
+        keys = np.asarray(keys, np.uint64)
+        vids = np.asarray(vids, np.uint64)
+        vsizes = np.asarray(vsizes, np.int64)
+        n = len(keys)
+        if n == 0:
+            return
+        if self.durability is not None:
+            self.wal_index += 1
+            self.durability.log_ingest(self.wal_index, kinds, keys, vids,
+                                       vsizes)
+        with self.obs.span(self, "ingest", n=n):
+            is_put = kinds == OP_PUT
+            recs = np.where(is_put,
+                            cfg.key_bytes + vsizes + cfg.wal_rec_overhead,
+                            cfg.key_bytes
+                            + cfg.wal_rec_overhead).astype(np.int64)
+            total = int(recs.sum())
+            seqs = np.uint64(self.seq + 1) + np.arange(n, dtype=np.uint64)
+            self.seq += n
+            if is_put.any():
+                # keep future mints ahead of every preserved vid so an
+                # ingested record and a later local write never collide on
+                # the same (key, vid)
+                self.next_vid = max(self.next_vid,
+                                    int(vids[is_put].max()) + 1)
+            self.io.seq_write(total, sio.CAT_WAL)
+            self.obs.instant(self, "ingest_append", nbytes=total, n=n)
+            ety = np.where(is_put, ETYPE_INLINE, ETYPE_TOMB).astype(np.uint8)
+            vsz = np.where(is_put, vsizes, 0).astype(np.int64)
+            use_vids = np.where(is_put, vids, 0).astype(np.uint64)
+            vf = np.full(n, -1, np.int64)
+            entry_bytes = self.memtable.entry_bytes_batch(ety, vsz)
+            self.in_batch_write = True
+            try:
+                i = 0
+                while i < n:
+                    i += self.memtable.put_batch(keys[i:], seqs[i:], ety[i:],
+                                                 use_vids[i:], vsz[i:],
+                                                 vf[i:], entry_bytes[i:])
+                    if self.memtable.full and i < n:
+                        self.immutables.append(self.memtable)
+                        self.memtable = Memtable(cfg)
+                        self.pump()
+                        self._stall_while(
+                            lambda: len(self.immutables) > cfg.max_immutables,
+                            trigger="memtable_stall")
+            finally:
+                self.in_batch_write = False
+            self.latest.apply_batch(is_put, keys, use_vids, vsz)
+            self.strategy.observe_batch(self, "write", keys, vsz)
+            self._after_write(total)
+        self.obs.on_op(self, "ingest_batch_n", n)
+        self.obs.on_op(self, "ingest_batch_bytes", total)
+        self.obs.tick(self)
+
     # -------------------------------------------------------- batched reads
     def multi_get(self, keys: np.ndarray) -> dict:
         """Columnar point lookups for a whole key array.

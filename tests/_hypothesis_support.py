@@ -3,8 +3,17 @@
 ``hypothesis`` drives the property tests but is not baked into every
 container this repo runs in.  Importing through this module keeps test
 *collection* working without it: plain tests still run, and each
-``@given``-decorated test turns into an explicit skip instead of a
-module-level ImportError.
+``@given``-decorated test skips at *runtime* with an explicit reason.
+
+The fallback ``given`` deliberately returns a fresh skipper function
+(not a ``pytest.mark.skip`` on the original): a mark can silently fall
+through to a trivial pass when the decorated function is re-wrapped or
+invoked outside pytest's collection (e.g. a ``@given`` helper called
+from inside another test), whereas ``pytest.skip(...)`` in the body
+always registers a real skip with its reason.  The skipper keeps the
+original's name for test-id stability but intentionally drops its
+signature (``functools.wraps`` would make pytest demand fixtures named
+after the strategy parameters).
 """
 
 import pytest
@@ -30,9 +39,34 @@ except ImportError:                                    # pragma: no cover
     HealthCheck = _Anything()
 
     def given(*args, **kwargs):
-        return pytest.mark.skip(reason="hypothesis not installed")
+        import inspect
+        bound = set(kwargs)
+
+        def deco(fn):
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = getattr(fn, "__name__", "hypothesis_test")
+            skipper.__doc__ = getattr(fn, "__doc__", None)
+            try:
+                # expose the original signature minus the strategy-bound
+                # params (keyword strategies bind by name, positional ones
+                # bind rightmost — hypothesis semantics) so pytest still
+                # maps parametrize arguments onto the skipper
+                sig = inspect.signature(fn)
+                params = [p for name, p in sig.parameters.items()
+                          if name not in bound]
+                if args:
+                    params = params[:-len(args)]
+                skipper.__signature__ = sig.replace(parameters=params)
+            except (ValueError, TypeError):    # pragma: no cover
+                pass
+            return skipper
+        return deco
 
     def settings(*args, **kwargs):
+        # robust to both ``@settings`` (bare) and ``@settings(...)``
+        if args and callable(args[0]) and not kwargs and len(args) == 1:
+            return args[0]
         return lambda f: f
 
 __all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "settings", "st"]

@@ -1,0 +1,420 @@
+"""Elastic fleet tests (DESIGN.md §14): the crash-consistency matrix over
+the four migration/failover crash points on every engine, split/merge
+round trips, epoch-stamped re-dispatch, auto-triggering, and the replica
+golden-parity contract after ``fail_primary``.
+
+The crash matrix is the lockdown: arm one of the new fleet crash points,
+drive a split (or failover) into it, and require ``ShardedStore.open`` to
+recover a fleet whose contents are byte-identical to the latest-write
+oracle — no lost key, no resurrected delete, no duplicated move — on all
+seven engines.  Migrations are *derived* work (never journaled), so
+recovery replays the user-op stream and re-derives them; the matrix is
+what makes that argument load-bearing.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ENGINES, EngineConfig, ShardedStore, Store, WriteBatch
+from repro.core.durability import CrashPoint, manifest_summary
+from repro.core.durability.wal import replay_into
+
+KEY_SPACE = 4096
+VSIZES = (64, 600, 2000)
+
+TINY = dict(memtable_bytes=8 << 10, ksst_bytes=8 << 10, vsst_bytes=32 << 10,
+            base_level_bytes=16 << 10, cache_bytes=16 << 10,
+            dropcache_keys=64, sep_threshold=256, max_levels=5)
+
+MIGRATION_POINTS = ("mid_migration_copy", "pre_reroute", "mid_delta_replay")
+
+
+def _cfg(engine, **kw):
+    return EngineConfig(engine=engine, **TINY, **kw)
+
+
+def _workload(fleet, oracle, rng, rounds=6, n=64, deletes=True):
+    """Mixed put/delete rounds against the fleet, mirrored into a
+    latest-write-wins dict oracle."""
+    for r in range(rounds):
+        ks = rng.integers(0, KEY_SPACE, n).astype(np.uint64)
+        vs = rng.choice(VSIZES, n).astype(np.int64)
+        b = WriteBatch().puts(ks, vs)
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            oracle[k] = v
+        if deletes and r % 2 == 1 and oracle:
+            dks = rng.choice(np.fromiter(oracle, np.uint64,
+                                         count=len(oracle)),
+                             min(8, len(oracle)), replace=False)
+            for k in dks.tolist():
+                b.delete(k)
+                oracle.pop(k, None)
+        fleet.write(b)
+
+
+def _assert_oracle(fleet, oracle):
+    """Fleet contents must match the oracle exactly: every live key found
+    with its latest vsize, every deleted key absent."""
+    assert oracle, "workload produced an empty oracle"
+    ks = np.fromiter(sorted(oracle), np.uint64, count=len(oracle))
+    res = fleet.multi_get(ks)
+    assert res["found"].all(), \
+        f"lost keys: {ks[~res['found']][:10].tolist()}"
+    want = np.array([oracle[int(k)] for k in ks.tolist()], np.int64)
+    assert (res["vsize"] == want).all()
+    dead = np.setdiff1d(np.arange(KEY_SPACE, dtype=np.uint64), ks)
+    if len(dead):
+        probe = dead[:: max(1, len(dead) // 64)]
+        assert not fleet.multi_get(probe)["found"].any(), \
+            "resurrected deleted/never-written keys"
+
+
+# ===================================================== crash matrix (§14)
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("point", MIGRATION_POINTS)
+def test_crash_matrix_split(tmp_path, engine, point):
+    """Crash inside each split phase; recovery must re-derive the
+    migration from the journal and land oracle-exact."""
+    rng = np.random.default_rng(11)
+    oracle = {}
+    fleet = ShardedStore(_cfg(engine), n_shards=2, key_space=KEY_SPACE,
+                         durability_dir=tmp_path / "fleet")
+    _workload(fleet, oracle, rng, rounds=4)
+    fleet.checkpoint()
+    _workload(fleet, oracle, rng, rounds=3)
+    fleet.arm_crash(point)
+    with pytest.raises(CrashPoint):
+        fleet.split_shard(0)
+    fleet.close()
+
+    rec = ShardedStore.open(tmp_path / "fleet")
+    _assert_oracle(rec, oracle)
+    summary = manifest_summary(tmp_path / "fleet" / "MANIFEST")
+    assert summary["kinds"]["fleet_checkpoint"] >= 1
+    assert summary["kinds"].get("migration_begin", 0) >= 1
+    # the recovered fleet keeps working: more writes, then a clean split
+    _workload(rec, oracle, rng, rounds=2)
+    _assert_oracle(rec, oracle)
+    rec.close()
+
+
+@pytest.mark.parametrize("point", MIGRATION_POINTS)
+def test_crash_matrix_merge(tmp_path, point):
+    """Same matrix through the merge path (victim drain + retire)."""
+    rng = np.random.default_rng(13)
+    oracle = {}
+    fleet = ShardedStore(_cfg("scavenger"), n_shards=3,
+                         key_space=KEY_SPACE,
+                         durability_dir=tmp_path / "fleet")
+    _workload(fleet, oracle, rng, rounds=4)
+    fleet.checkpoint()
+    _workload(fleet, oracle, rng, rounds=2)
+    fleet.arm_crash(point)
+    with pytest.raises(CrashPoint):
+        fleet.merge_shards(1)
+    fleet.close()
+
+    rec = ShardedStore.open(tmp_path / "fleet")
+    _assert_oracle(rec, oracle)
+    _workload(rec, oracle, rng, rounds=2)
+    _assert_oracle(rec, oracle)
+    rec.close()
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_crash_matrix_pre_promote(tmp_path, engine):
+    """Crash at the promotion edge: the primary is still the recovered
+    machine, and post-recovery failover works on the re-seeded replicas."""
+    rng = np.random.default_rng(17)
+    oracle = {}
+    fleet = ShardedStore(_cfg(engine, replica_count=1, replica_lag_ops=4),
+                         n_shards=2, key_space=KEY_SPACE,
+                         durability_dir=tmp_path / "fleet")
+    _workload(fleet, oracle, rng, rounds=4)
+    fleet.checkpoint()
+    _workload(fleet, oracle, rng, rounds=2)
+    fleet.arm_crash("pre_promote")
+    with pytest.raises(CrashPoint):
+        fleet.fail_primary(0)
+    fleet.close()
+
+    rec = ShardedStore.open(tmp_path / "fleet")
+    _assert_oracle(rec, oracle)
+    _workload(rec, oracle, rng, rounds=2)
+    rec.fail_primary(0)              # re-seeded replicas can promote
+    _assert_oracle(rec, oracle)
+    summary = manifest_summary(tmp_path / "fleet" / "MANIFEST")
+    assert summary["kinds"].get("replica_promote", 0) >= 1
+    rec.close()
+
+
+def test_crash_recovery_after_completed_split(tmp_path):
+    """Checkpoint *after* a split: recovery restores the split topology
+    (router state + per-shard-id snapshots) instead of re-deriving it."""
+    rng = np.random.default_rng(19)
+    oracle = {}
+    fleet = ShardedStore(_cfg("scavenger"), n_shards=2,
+                         key_space=KEY_SPACE,
+                         durability_dir=tmp_path / "fleet")
+    _workload(fleet, oracle, rng, rounds=4)
+    assert fleet.split_shard(0) is not None
+    epoch = fleet.router.epoch
+    fleet.checkpoint()
+    _workload(fleet, oracle, rng, rounds=2)
+    fleet.close()
+
+    rec = ShardedStore.open(tmp_path / "fleet")
+    assert len(rec.shards) == 3
+    assert rec.router.epoch >= epoch
+    assert rec.router.state_dict()["cuts"][-1] == KEY_SPACE
+    _assert_oracle(rec, oracle)
+    rec.close()
+
+
+# ============================================== split/merge round trips
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_split_then_merge_roundtrip(engine):
+    """Explicit split then merge back: oracle intact, vids preserved
+    across the move, scans ordered across the new boundaries, epoch
+    strictly monotone."""
+    rng = np.random.default_rng(23)
+    oracle = {}
+    fleet = ShardedStore(_cfg(engine), n_shards=2, key_space=KEY_SPACE)
+    _workload(fleet, oracle, rng, rounds=5)
+    ks = np.fromiter(sorted(oracle), np.uint64, count=len(oracle))
+    before = fleet.multi_get(ks)
+
+    new_pos = fleet.split_shard(0)
+    assert new_pos is not None
+    assert fleet.router.epoch == 1
+    assert len(fleet.shards) == 3
+    after = fleet.multi_get(ks)
+    assert after["found"].all()
+    # migration preserves value identity, not just size
+    assert (after["vid"] == before["vid"]).all()
+    assert (after["vsize"] == before["vsize"]).all()
+
+    got = fleet.multi_scan(np.array([0], np.int64), 200)[0]
+    keys_only = [k for k, _ in got]
+    assert keys_only == sorted(keys_only)
+    assert keys_only == sorted(oracle)[:len(got)]
+
+    assert fleet.merge_shards(new_pos)
+    assert fleet.router.epoch == 2
+    assert len(fleet.shards) == 2
+    _assert_oracle(fleet, oracle)
+    got = fleet.multi_scan(np.array([0], np.int64), 200)[0]
+    keys_only = [k for k, _ in got]
+    assert keys_only == sorted(oracle)[:len(got)]
+
+    st = fleet.stats()
+    assert st["n_migrations"] == 2
+    assert st["router_epoch"] == 2
+    kinds = [m["kind"] for m in fleet.migrations]
+    assert kinds == ["split", "merge"]
+    assert all(m["fence_us"] >= 0.0 for m in fleet.migrations)
+    assert fleet.migrated_bytes() > 0
+
+
+def test_hash_policy_split_merge_roundtrip():
+    """Splits cut the *hashed* domain: fan-out scans stay correct and the
+    oracle survives a hash-slice round trip."""
+    rng = np.random.default_rng(29)
+    oracle = {}
+    fleet = ShardedStore(_cfg("scavenger"), n_shards=2,
+                         shard_policy="hash")
+    _workload(fleet, oracle, rng, rounds=5)
+    new_pos = fleet.split_shard(1)
+    assert new_pos is not None
+    _assert_oracle(fleet, oracle)
+    got = fleet.multi_scan(np.array([0], np.int64), 100)[0]
+    assert [k for k, _ in got] == sorted(oracle)[:len(got)]
+    assert fleet.merge_shards(new_pos)
+    _assert_oracle(fleet, oracle)
+
+
+def test_split_empty_shard_returns_none():
+    fleet = ShardedStore(_cfg("rocksdb"), n_shards=2, key_space=KEY_SPACE)
+    assert fleet.split_shard(0) is None
+    assert fleet.router.epoch == 0
+    assert len(fleet.shards) == 2
+
+
+# ======================================= epoch fencing & re-dispatch
+
+def test_epoch_bump_mid_batch_redispatches(monkeypatch):
+    """Force a split to finalize between two shard sub-batches of one
+    WriteBatch: the epoch-stamped worklist must detect the bump and
+    re-route the unwritten rows — nothing lost, nothing written twice."""
+    rng = np.random.default_rng(31)
+    oracle = {}
+    fleet = ShardedStore(_cfg("scavenger"), n_shards=2,
+                         key_space=KEY_SPACE)
+    _workload(fleet, oracle, rng, rounds=4, deletes=False)
+
+    fired = {"done": False}
+    orig = ShardedStore._shard_write
+
+    def hook(self, pos, kinds, keys, vsizes):
+        vids = orig(self, pos, kinds, keys, vsizes)
+        if not fired["done"]:
+            fired["done"] = True
+            self.split_shard(1)      # epoch bump with rows still pending
+        return vids
+
+    monkeypatch.setattr(ShardedStore, "_shard_write", hook)
+    ks = np.arange(0, KEY_SPACE, 16).astype(np.uint64)   # spans both shards
+    vs = np.full(len(ks), 600, np.int64)
+    fleet.write(WriteBatch().puts(ks, vs))
+    monkeypatch.setattr(ShardedStore, "_shard_write", orig)
+    for k, v in zip(ks.tolist(), vs.tolist()):
+        oracle[k] = v
+
+    assert fired["done"]
+    assert fleet.redispatches >= 1
+    assert len(fleet.shards) == 3
+    _assert_oracle(fleet, oracle)
+
+
+def test_auto_split_trigger():
+    """A hot shard crossing elastic_split_frac gets split automatically
+    at op boundaries; the fleet grows toward elastic_max_shards and the
+    hot shard's space share drops."""
+    cfg = _cfg("scavenger", elastic_split_frac=0.6,
+               elastic_cooldown_ops=256, elastic_max_shards=4,
+               migration_chunk_records=64)
+    fleet = ShardedStore(cfg, n_shards=2, key_space=KEY_SPACE)
+    assert fleet.elastic.auto
+    rng = np.random.default_rng(37)
+    oracle = {}
+    for _ in range(30):              # hammer shard 0's slice
+        ks = rng.integers(0, KEY_SPACE // 4, 64).astype(np.uint64)
+        vs = rng.choice(VSIZES, 64).astype(np.int64)
+        fleet.write(WriteBatch().puts(ks, vs))
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            oracle[k] = v
+    fleet.drain()                    # quiesce any in-flight migration
+    assert len(fleet.shards) > 2
+    assert len(fleet.shards) <= cfg.elastic_max_shards
+    assert fleet.stats()["n_migrations"] >= 1
+    assert fleet.router.epoch >= 1
+    _assert_oracle(fleet, oracle)
+
+
+def test_auto_merge_drains_cold_shard():
+    """A shard whose space/traffic share falls below elastic_merge_frac
+    is drained into a neighbor and retired."""
+    cfg = _cfg("scavenger", elastic_merge_frac=0.05,
+               elastic_cooldown_ops=256, migration_chunk_records=64)
+    fleet = ShardedStore(cfg, n_shards=3, key_space=KEY_SPACE)
+    rng = np.random.default_rng(41)
+    oracle = {}
+    lo = KEY_SPACE // 3              # shard 0's slice stays cold
+    for _ in range(20):
+        ks = rng.integers(lo, KEY_SPACE, 64).astype(np.uint64)
+        vs = rng.choice(VSIZES, 64).astype(np.int64)
+        fleet.write(WriteBatch().puts(ks, vs))
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            oracle[k] = v
+    fleet.drain()
+    assert len(fleet.shards) < 3
+    assert any(m["kind"] == "merge" for m in fleet.migrations)
+    assert len(fleet.retired) >= 1
+    _assert_oracle(fleet, oracle)
+    # retired history still counts in fleet aggregates
+    assert fleet.user_write_bytes >= sum(s.user_write_bytes
+                                         for s in fleet.shards)
+
+
+def test_elasticity_off_is_inert():
+    """Default config: no ElasticityManager activity, epoch pinned at 0,
+    no redispatches — the fleet behaves exactly like the pre-elastic
+    ShardedStore (n_shards=1 ≡ Store parity is locked down in
+    test_sharding.py)."""
+    cfg = _cfg("scavenger")
+    assert cfg.elastic_split_frac is None
+    assert cfg.elastic_merge_frac == 0.0
+    assert cfg.replica_count == 0
+    fleet = ShardedStore(cfg, n_shards=2, key_space=KEY_SPACE)
+    assert not fleet.elastic.auto
+    rng = np.random.default_rng(43)
+    oracle = {}
+    _workload(fleet, oracle, rng, rounds=6)
+    fleet.drain()
+    assert fleet.router.epoch == 0
+    assert fleet.redispatches == 0
+    assert fleet.migrations == []
+    assert fleet.replicators == {}
+    st = fleet.stats()
+    assert st["n_migrations"] == 0 and st["router_epoch"] == 0
+    _assert_oracle(fleet, oracle)
+
+
+# ====================================== replication & failover (§14)
+
+@pytest.mark.parametrize("engine", ("scavenger", "titan"))
+def test_failover_promoted_replica_matches_golden_replay(engine):
+    """The golden-parity contract: after ``fail_primary`` mid-workload,
+    the promoted replica is byte-identical — full stats dict, vid
+    watermark, oracle contents — to a fresh Store that replayed the same
+    replication log (vid minting and scheduling are pure functions of the
+    per-shard op stream)."""
+    cfg = _cfg(engine, replica_count=2, replica_lag_ops=8)
+    fleet = ShardedStore(cfg, n_shards=2, key_space=KEY_SPACE)
+    rng = np.random.default_rng(47)
+    oracle = {}
+    _workload(fleet, oracle, rng, rounds=5)
+    # mixed read/scan traffic replicates too (clock parity needs it)
+    ks = np.fromiter(sorted(oracle), np.uint64, count=len(oracle))
+    fleet.multi_get(ks[:64])
+    fleet.multi_scan(np.array([0], np.int64), 50)
+
+    prim = fleet.shards[0]
+    rep = fleet.replicators[prim.shard_id]
+    assert rep.applied[0] >= rep.applied[1]      # rank 0 lags least
+    log_copy = list(rep.log)
+    prim_cfg = prim.cfg
+
+    promoted = fleet.fail_primary(0)
+    assert promoted is fleet.shards[0]
+    assert promoted is not prim
+
+    golden = Store(dataclasses.replace(prim_cfg, observer=None))
+    replay_into(golden, log_copy)
+    assert golden.stats() == promoted.stats()
+    assert golden.next_vid == promoted.next_vid
+    gks = np.fromiter(sorted(oracle), np.uint64, count=len(oracle))
+    on_shard = gks[fleet.router.shard_of(gks) == 0]
+    if len(on_shard):
+        g = golden.multi_get(on_shard)
+        p = promoted.multi_get(on_shard)
+        assert (g["found"] == p["found"]).all()
+        assert (g["vid"] == p["vid"]).all()
+
+    # the fleet keeps serving through the promoted primary
+    _assert_oracle(fleet, oracle)
+    _workload(fleet, oracle, rng, rounds=2)
+    _assert_oracle(fleet, oracle)
+
+
+def test_fail_primary_without_replicas_raises():
+    fleet = ShardedStore(_cfg("rocksdb"), n_shards=2, key_space=KEY_SPACE)
+    with pytest.raises(ValueError, match="no replicas"):
+        fleet.fail_primary(0)
+
+
+def test_replica_lag_bounds_applied_positions():
+    """Rank r trails the log tail by r * replica_lag_ops records until a
+    promotion replays the remainder."""
+    cfg = _cfg("scavenger", replica_count=3, replica_lag_ops=5)
+    fleet = ShardedStore(cfg, n_shards=1, key_space=KEY_SPACE)
+    rng = np.random.default_rng(53)
+    _workload(fleet, {}, rng, rounds=4, deletes=False)
+    rep = fleet.replicators[fleet.shards[0].shard_id]
+    n = len(rep.log)
+    assert rep.applied == [max(0, n - r * 5) for r in range(3)]
+    assert rep.best() == 0

@@ -220,6 +220,117 @@ def test_range_router_overflow_keys_go_last_shard():
     assert sid.tolist() == [0, 0, 1, 3, 3, 3]
 
 
+# ------------------------- elastic router topology properties (§14) ----
+# The contract after ANY split/merge sequence: every live shard owns
+# exactly one slice, cuts stay strictly ascending and end at the domain,
+# every key routes to exactly one live shard, and the epoch is strictly
+# monotone across topology changes.  A hypothesis version explores op
+# sequences when the library is present; the seeded version always runs.
+
+def _apply_topo(router, ops):
+    """Apply a split/merge sequence the way ShardedStore does: a split
+    hands the upper half to a freshly appended shard position; a merge
+    retires the victim position and renumbers the survivors."""
+    n_live = len(router.owners)
+    epochs = [router.epoch]
+    for kind, frac in ops:
+        if kind == "split":
+            pos = int(frac * n_live) % n_live
+            lo, hi = router.shard_range(pos)
+            if hi - lo < 2:
+                continue
+            router.split(pos, lo + (hi - lo) // 2, n_live)
+            n_live += 1
+        else:
+            if n_live < 2:
+                continue
+            pos = int(frac * n_live) % n_live
+            router.merge(pos, router.neighbors(pos)[0])
+            router.renumber_removed(pos)
+            n_live -= 1
+        epochs.append(router.epoch)
+    return n_live, epochs
+
+
+def _check_router_invariants(router, n_live, keys):
+    # exactly one slice per live shard, positions dense
+    assert sorted(router.owners) == list(range(n_live))
+    assert router.cuts == sorted(set(router.cuts))
+    assert router.cuts[-1] == router.domain
+    # every key routes to exactly one live shard...
+    sid = router.shard_of(keys)
+    assert sid.min() >= 0 and sid.max() < n_live
+    # ...and lands inside its slice's bounds (last slice absorbs overflow)
+    rv = router.route(keys)
+    sl = router.slice_of(keys)
+    lows = np.array([router.slice_bounds(j)[0]
+                     for j in range(router.n_slices)], np.uint64)
+    assert (rv >= lows[sl]).all()
+    inner = sl < router.n_slices - 1
+    if inner.any():
+        # cuts[:-1] only: the final cut equals the domain (2^64 for hash),
+        # which does not fit uint64 — and the last slice is hi-unbounded
+        his = np.array(router.cuts[:-1], np.uint64)
+        assert (rv[inner] < his[sl[inner]]).all()
+    for pos in range(n_live):
+        assert router.owners[router.slice_of_shard(pos)] == pos
+
+
+@pytest.mark.parametrize("policy", ["range", "hash"])
+def test_router_topology_invariants_seeded(policy):
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        router = make_router(policy, int(rng.integers(1, 5)),
+                             key_space=4096)
+        ops = [("split" if rng.random() < 0.6 else "merge",
+                float(rng.random())) for _ in range(int(rng.integers(1, 12)))]
+        n_live, epochs = _apply_topo(router, ops)
+        assert epochs == sorted(epochs)
+        assert len(set(epochs)) == len(epochs), "epoch must bump per change"
+        keys = rng.integers(0, 5000, 300).astype(np.uint64)
+        _check_router_invariants(router, n_live, keys)
+
+
+topo_ops = st.lists(
+    st.tuples(st.sampled_from(["split", "split", "merge"]),
+              st.floats(min_value=0.0, max_value=1.0)),
+    min_size=1, max_size=12)
+
+
+@pytest.mark.parametrize("policy", ["range", "hash"])
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=topo_ops, seed=st.integers(min_value=0, max_value=1 << 16))
+def test_router_topology_invariants(policy, ops, seed):
+    router = make_router(policy, 2, key_space=4096)
+    n_live, epochs = _apply_topo(router, ops)
+    assert epochs == sorted(epochs)
+    assert len(set(epochs)) == len(epochs)
+    keys = np.random.default_rng(seed).integers(0, 5000, 300) \
+        .astype(np.uint64)
+    _check_router_invariants(router, n_live, keys)
+
+
+def test_scan_spills_across_split_boundary():
+    """Range scans must spill in *slice* order after a split appends a
+    shard whose position no longer tracks key order."""
+    s = ShardedStore(EngineConfig(engine="scavenger", **TINY_CFG),
+                     n_shards=2, shard_policy="range", key_space=200)
+    rng = np.random.default_rng(9)
+    oracle = {}
+    for _ in range(4):
+        ks = rng.integers(0, 200, 80).astype(np.uint64)
+        vs = rng.choice([64, 600], 80).astype(np.int64)
+        vids = s.write(WriteBatch().puts(ks, vs))
+        oracle.update(zip(ks.tolist(), vids.tolist()))
+    assert s.split_shard(0, cut=50) is not None   # slices: [0,50)[50,100)[100,200)
+    starts = np.array([0, 49, 50, 99, 100, 150], np.int64)
+    counts = np.full(len(starts), 60, np.int64)
+    for st_, out in zip(starts.tolist(), s.multi_scan(starts, counts)):
+        exp = sorted(k for k in oracle if k >= st_)[:60]
+        assert out == [(k, oracle[k]) for k in exp], f"start={st_}"
+
+
 def test_bad_configs_raise():
     cfg = EngineConfig(engine="scavenger", **TINY_CFG)
     with pytest.raises(ValueError):
